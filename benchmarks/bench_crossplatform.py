@@ -1,0 +1,111 @@
+"""Paper Table 3 analogue: aligned-scope cross-platform comparison.
+
+Rows:
+  * TPU-event (Ours, accelerator-scope) — event-driven path, work ~ active
+    events, weights VMEM-resident; latency/energy are labeled projections
+    from the co-design model (the paper's own FPGA energy number is a
+    tool-based estimate too).
+  * TPU-batch — time-batched MXU execution (throughput mode), HBM-streamed.
+  * dense FP32 / dense INT8 — dense grouped-neuron executions of the SAME
+    exported parameters (the paper's GPU/CPU baseline protocol), measured
+    wall-clock on this container's CPU (compute-only scope).
+All rows share one deployment artifact; accuracy comes from full-test-set
+evaluation, and the TTFS rows are bit-exact against the software reference.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as CM
+from repro.core.accelerator import SNNAccelerator
+from repro.core.hw import PYNQ_Z2
+from repro.core.reference import SNNReference
+
+
+def run(quick: bool = False) -> list[dict]:
+    art, xte, yte = CM.get_artifact_and_data(quick)
+    n = len(xte)
+    ref = SNNReference(art)
+    rows = []
+
+    # --- TTFS runtimes (agreement + accuracy) ----------------------------
+    acc_b = SNNAccelerator(art, mode="batch")
+    t_batch, out_b = CM.timed(acc_b.forward, xte[:1024], iters=2)
+    labels_full = []
+    for i in range(0, n, 2048):
+        labels_full.append(np.asarray(acc_b.forward(xte[i:i + 2048]).labels))
+    labels_full = np.concatenate(labels_full)
+    acc_ttfs = float(np.mean(labels_full == yte))
+
+    ev = CM.snn_event_cost_per_image(art, xte[:2048])
+    dn = CM.snn_dense_cost_per_image(art)
+    rows.append({
+        "platform": "TPU-event (Ours, accelerator-scope, projected)",
+        "accuracy_pct": 100 * acc_ttfs,
+        "latency_us_img": ev["proj_latency_us"],
+        "throughput_img_s": 1e6 / ev["proj_latency_us"],
+        "energy_nj_img": ev["proj_energy_nj"],
+        "scope": "accelerator (event-driven, VMEM-resident weights)",
+    })
+    rows.append({
+        "platform": "TPU-batch (Ours, accelerator-scope, projected)",
+        "accuracy_pct": 100 * acc_ttfs,
+        "latency_us_img": dn["proj_latency_us"],
+        "throughput_img_s": 1e6 / dn["proj_latency_us"],
+        "energy_nj_img": dn["proj_energy_nj"],
+        "scope": "accelerator (time-batched MXU, HBM-streamed)",
+    })
+
+    # --- dense baselines, same exported parameters ------------------------
+    for mode in ("fp32", "int8"):
+        fn = (ref.dense_logits_fp32 if mode == "fp32" else ref.dense_logits_int8)
+        t_dense, _ = CM.timed(fn, xte[:1024], iters=3)
+        preds = []
+        for i in range(0, n, 2048):
+            preds.append(np.asarray(ref.dense_labels(xte[i:i + 2048], mode)))
+        acc_d = float(np.mean(np.concatenate(preds) == yte))
+        rows.append({
+            "platform": f"CPU dense {mode.upper()} (measured, compute-only)",
+            "accuracy_pct": 100 * acc_d,
+            "latency_us_img": t_dense / 1024 * 1e6,
+            "throughput_img_s": 1024 / t_dense,
+            "energy_nj_img": None,
+            "scope": "compute-only (this container's CPU)",
+        })
+
+    # --- measured container wall-clock for the TTFS batch path ------------
+    rows.append({
+        "platform": "CPU TTFS batch path (measured, this container)",
+        "accuracy_pct": 100 * acc_ttfs,
+        "latency_us_img": t_batch / 1024 * 1e6,
+        "throughput_img_s": 1024 / t_batch,
+        "energy_nj_img": None,
+        "scope": "accelerator-path ops on host CPU (not a TPU number)",
+    })
+    rows.append({
+        "platform": "FPGA paper reference (PYNQ-Z2 PL-only, reported)",
+        "accuracy_pct": PYNQ_Z2.accuracy_pct,
+        "latency_us_img": PYNQ_Z2.service_latency_us,
+        "throughput_img_s": 1e6 / PYNQ_Z2.service_latency_us,
+        "energy_nj_img": PYNQ_Z2.dynamic_energy_nj,
+        "scope": "paper Table 3 row (real MNIST; ours is procedural)",
+    })
+    CM.emit("crossplatform", rows)
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick)
+    hdr = f"{'platform':<52} {'acc%':>7} {'us/img':>10} {'img/s':>12} {'nJ/img':>10}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        e = "N/A" if r["energy_nj_img"] is None else f"{r['energy_nj_img']:.1f}"
+        print(f"{r['platform']:<52} {r['accuracy_pct']:>7.2f} "
+              f"{r['latency_us_img']:>10.4f} {r['throughput_img_s']:>12.0f} "
+              f"{e:>10}")
+
+
+if __name__ == "__main__":
+    main()

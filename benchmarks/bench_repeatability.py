@@ -1,0 +1,55 @@
+"""Paper §3.3 analogue: repeatability — N repeated runs over the test set,
+report prediction mismatches across runs (paper: 0 in 50,000 image-run
+pairs) and end-to-end latency mean/std (paper: 56.77 +/- 0.20 ms/img on the
+embedded host)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as CM
+from repro.core.accelerator import SNNAccelerator
+from repro.core.agreement import repeatability
+
+
+def run(quick: bool = False) -> list[dict]:
+    art, xte, yte = CM.get_artifact_and_data(quick)
+    n = 2000 if quick else 10000
+    rep = repeatability(art, xte[:n], yte[:n], runs=5, chunk=2048)
+
+    # end-to-end per-image latency over repeated single-batch runs
+    acc = SNNAccelerator(art, mode="batch")
+    lat = []
+    _ = acc.forward(xte[:256])
+    for _ in range(10):
+        t0 = time.perf_counter()
+        jax.block_until_ready(acc.forward(xte[:256]).labels)
+        lat.append((time.perf_counter() - t0) / 256 * 1e3)
+    rows = [{
+        "runs": rep["runs"],
+        "image_run_pairs": rep["image_run_pairs"],
+        "mismatches": rep["mismatches"],
+        "accuracy_per_run_pct": [100 * a for a in rep["accuracy_per_run"]],
+        "accuracy_stable": rep["accuracy_stable"],
+        "e2e_ms_per_img_mean": float(np.mean(lat)),
+        "e2e_ms_per_img_std": float(np.std(lat)),
+    }]
+    CM.emit("repeatability", rows)
+    return rows
+
+
+def main(quick: bool = False):
+    r = run(quick)[0]
+    print(f"runs={r['runs']} pairs={r['image_run_pairs']} "
+          f"mismatches={r['mismatches']} stable={r['accuracy_stable']}")
+    print(f"accuracy/run: {[f'{a:.2f}' for a in r['accuracy_per_run_pct']]}")
+    print(f"e2e latency: {r['e2e_ms_per_img_mean']:.4f} "
+          f"+/- {r['e2e_ms_per_img_std']:.4f} ms/img (this host)")
+    assert r["mismatches"] == 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Table 1 analogue: deployment resource analysis.
+
+The paper reports post-route utilization (BRAM 140/140 = the binding
+constraint). Our planner answers the same co-design question for the TPU
+budget: does the event-processing working set fit on-chip (VMEM = the BRAM
+analogue), what binds first, and how far the topology could scale."""
+
+from __future__ import annotations
+
+from benchmarks import common as CM
+from repro.core import codesign
+from repro.core.hw import PYNQ_Z2
+
+
+def run(quick: bool = False) -> list[dict]:
+    art, _, _ = CM.get_artifact_and_data(quick)
+    n_in = art.m("model", "n_in")
+    n_out = art.m("model", "n_out")
+    rows = []
+    for label, ni, no in [
+        ("deployed 784->150 (paper workload)", n_in, n_out),
+        ("paper's direct-addressing limit (2048 neurons)", n_in, 2048),
+        ("paper's encodable limit (4890 neurons)", n_in, 4890),
+        ("VMEM-limit topology at n_in=784", n_in,
+         codesign.plan(n_in, n_out).max_neurons_vmem),
+    ]:
+        r = codesign.plan(ni, no)
+        rows.append({"config": label, "n_out": no, "n_pad": r.n_pad,
+                     "blocks": r.n_blocks, "synapses": r.synapses,
+                     "vmem_bytes": r.vmem_bytes_total,
+                     "vmem_util_pct": 100 * r.vmem_util,
+                     "limiter": r.limiter})
+    CM.emit("resources", rows)
+    return rows
+
+
+def main(quick: bool = False):
+    art, _, _ = CM.get_artifact_and_data(quick)
+    print(codesign.plan(art.m("model", "n_in"), art.m("model", "n_out")).table())
+    print()
+    for r in run(quick):
+        print(f"{r['config']:<48} pad={r['n_pad']:>6} "
+              f"VMEM={r['vmem_util_pct']:>7.3f}%  {r['limiter']}")
+    print(f"\npaper reference: BRAM {PYNQ_Z2.bram_tiles}/{PYNQ_Z2.bram_tiles} "
+          f"(100%) — BRAM-limited; {PYNQ_Z2.packed_synapses:,} packed synapses")
+
+
+if __name__ == "__main__":
+    main()

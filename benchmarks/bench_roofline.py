@@ -1,0 +1,55 @@
+"""Roofline table for the LM zoo — renders EXPERIMENTS.md §Roofline from the
+dry-run result JSONs (results/dryrun/*.json). Run the sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load() -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    if not rows:
+        raise FileNotFoundError(
+            f"no dry-run results in {DRYRUN_DIR}; run repro.launch.dryrun --all")
+    return rows
+
+
+def render(rows: list[dict], mesh: str = "single") -> str:
+    out = [f"{'arch':<22} {'shape':<12} {'compute_s':>11} {'memory_s':>11} "
+           f"{'collect_s':>11} {'bottleneck':<11} {'useful':>7} {'MFU':>7}"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"{r['arch']:<22} {r['shape']:<12} "
+                       f"{'— skipped: ' + r['reason'][:58]}")
+            continue
+        out.append(
+            f"{r['arch']:<22} {r['shape']:<12} {r['compute_s']:>11.3e} "
+            f"{r['memory_s']:>11.3e} {r['collective_s']:>11.3e} "
+            f"{r['bottleneck']:<11} {r['useful_ratio']:>7.1%} {r['mfu']:>7.2%}")
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    print(f"loaded {len(rows)} cells ({len(ok)} compiled)")
+    print("\n--- single-pod (16x16 = 256 chips) ---")
+    print(render(rows, "single"))
+    print("\n--- multi-pod (2x16x16 = 512 chips) ---")
+    print(render(rows, "multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Paper Fig 2 analogue: system-path latency decomposition.
+
+The paper splits end-to-end per-image time into: software reference
+evaluation, spike packing, hardware run + orchestration, sync/readback. We
+measure the same stages of our deployment path on this host and report them
+per image, keeping the accelerator-scope number in the callout exactly as
+the figure does."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as CM
+from repro.core import ttfs
+from repro.core.accelerator import SNNAccelerator
+from repro.core.events import pack_events_batched
+from repro.core.reference import SNNReference
+
+
+def run(quick: bool = False) -> list[dict]:
+    art, xte, yte = CM.get_artifact_and_data(quick)
+    B = 1024 if not quick else 512
+    imgs = xte[:B]
+    T = art.m("encode", "T")
+
+    ref = SNNReference(art)
+    acc = SNNAccelerator(art, mode="event")
+
+    # stage 1: software reference evaluation
+    t0 = time.perf_counter()
+    out_ref = ref.forward(imgs)
+    jax.block_until_ready(out_ref.labels)
+    t_ref = time.perf_counter() - t0
+
+    # stage 2: spike packing (host)
+    t0 = time.perf_counter()
+    times = np.asarray(ttfs.encode_ttfs(jnp.asarray(imgs), T,
+                                        art.m("encode", "x_min")))
+    frames = pack_events_batched(times, T, art.m("events", "e_max"))
+    t_pack = time.perf_counter() - t0
+
+    # stage 3: hardware run + orchestration (jitted event path)
+    _ = acc._fwd_event(frames.ids)          # warmup compile
+    t0 = time.perf_counter()
+    out_hw = acc._fwd_event(frames.ids)
+    jax.block_until_ready(out_hw.labels)
+    t_hw = time.perf_counter() - t0
+
+    # stage 4: sync/readback + prediction compare (host)
+    t0 = time.perf_counter()
+    hw_labels = np.asarray(out_hw.labels)
+    match = bool(np.array_equal(hw_labels, np.asarray(out_ref.labels)))
+    t_read = time.perf_counter() - t0
+
+    proj = CM.snn_event_cost_per_image(art, imgs)
+    rows = [{
+        "stage": s, "ms_per_image": 1e3 * t / B,
+        "share_pct": 100 * t / (t_ref + t_pack + t_hw + t_read)}
+        for s, t in [("software reference evaluation", t_ref),
+                     ("spike packing", t_pack),
+                     ("hardware run + orchestration", t_hw),
+                     ("sync/readback + compare", t_read)]]
+    rows.append({"stage": "END-TO-END", "ms_per_image":
+                 1e3 * (t_ref + t_pack + t_hw + t_read) / B,
+                 "share_pct": 100.0})
+    rows.append({"stage": "CALLOUT accelerator-scope (projected TPU)",
+                 "ms_per_image": proj["proj_latency_us"] / 1e3,
+                 "share_pct": None, "prediction_match": match})
+    CM.emit("system_breakdown", rows)
+    return rows
+
+
+def main(quick: bool = False):
+    for r in run(quick):
+        share = "" if r["share_pct"] is None else f"{r['share_pct']:6.1f}%"
+        print(f"{r['stage']:<46} {r['ms_per_image']:>12.5f} ms/img {share}")
+
+
+if __name__ == "__main__":
+    main()

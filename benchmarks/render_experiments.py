@@ -1,0 +1,84 @@
+"""Regenerate the §Roofline tables inside EXPERIMENTS.md from
+results/dryrun/*.json (between the ROOFLINE_TABLE markers).
+
+    PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DRYRUN = os.path.join(ROOT, "results", "dryrun")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def _fmt(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def load(variant_filter=lambda v: v == "baseline") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        r = json.load(open(f))
+        if variant_filter(r.get("variant", "baseline")):
+            rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9),
+                             r["mesh"]))
+    return rows
+
+
+def table(rows: list[dict], mesh: str) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful | MFU@bound |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"*skip: full-attention* | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(r['compute_s'])} | "
+            f"{_fmt(r['memory_s'])} | {_fmt(r['collective_s'])} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.1%} | {r['mfu']:.2%} |")
+    return "\n".join(out)
+
+
+def summary(rows: list[dict]) -> str:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    sk = [r for r in rows if r.get("status") == "skipped"]
+    by_b = {}
+    for r in ok:
+        by_b[r["bottleneck"]] = by_b.get(r["bottleneck"], 0) + 1
+    worst = sorted((r for r in ok if r["shape"] == "train_4k"),
+                   key=lambda r: r["mfu"])[:3]
+    return (f"{len(ok)} compiled cells, {len(sk)} documented skips. "
+            f"Bottleneck census: {by_b}. "
+            "Lowest-MFU train cells: "
+            + ", ".join(f"{r['arch']} ({r['mfu']:.1%})" for r in worst) + ".")
+
+
+def main():
+    rows = load()
+    text = open(EXP).read()
+    start = text.index("<!-- ROOFLINE_TABLE -->")
+    end_marker = "## §Perf — hillclimb log"
+    end = text.index(end_marker)
+    gen = ["<!-- ROOFLINE_TABLE -->", "",
+           summary(rows), "",
+           "### Single-pod (16×16 = 256 chips)", "",
+           table(rows, "single"), "",
+           "### Multi-pod (2×16×16 = 512 chips)", "",
+           table(rows, "multi"), "", ""]
+    open(EXP, "w").write(text[:start] + "\n".join(gen) + text[end:])
+    print(f"EXPERIMENTS.md §Roofline regenerated ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

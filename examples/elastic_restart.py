@@ -1,0 +1,78 @@
+"""Fault-tolerance demo: kill/restore + host churn + straggler response.
+
+Simulates a 4-host data-parallel training job in-process:
+  1. trains with deterministic per-host data shards,
+  2. "crashes" after step 5 (state discarded),
+  3. restores from the atomic checkpoint and replays to step 10 —
+     asserts the trajectory is bit-identical to an uninterrupted run,
+  4. kills host h2: rendezvous reassignment moves ONLY h2's shards,
+  5. a straggler appears: work shares rebalance inversely to speed.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, reduced
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.models.model import LM
+from repro.training import lm_step, optim as O
+from repro.training.checkpoint import CheckpointManager
+from repro.training.elastic import (StragglerMonitor, rebalance,
+                                    shard_assignment)
+
+CKPT = "/tmp/repro_elastic_demo"
+
+cfg = reduced(get_config("yi-6b"))
+lm = LM(cfg)
+params0 = lm.init_params(jax.random.PRNGKey(0), jnp.float32)
+optimizer = O.adamw(lr=1e-3)
+step = jax.jit(lm_step.make_train_step(lm, optimizer))
+pipe = TokenPipeline(TokenPipelineConfig(vocab=cfg.vocab, seq_len=32,
+                                         global_batch=8, n_hosts=4))
+
+# --- uninterrupted run (ground truth) -----------------------------------
+p, o = params0, optimizer.init(params0)
+for i in range(10):
+    p, o, _ = step(p, o, jax.tree.map(jnp.asarray, pipe.global_batch_at(i)))
+truth = jax.tree.leaves(p)
+
+# --- crash at 5, restore, replay ------------------------------------------
+mgr = CheckpointManager(CKPT, keep=1)
+p, o = params0, optimizer.init(params0)
+for i in range(5):
+    p, o, _ = step(p, o, jax.tree.map(jnp.asarray, pipe.global_batch_at(i)))
+mgr.save(5, {"params": p, "opt": o})
+print("step 5: checkpoint saved; simulating crash (state dropped)")
+del p, o
+
+at, restored = mgr.restore({"params": params0, "opt": optimizer.init(params0)})
+p, o = restored["params"], restored["opt"]
+print(f"restored at step {at}; data pipeline regenerates shards "
+      "deterministically per (seed, step, host)")
+for i in range(at, 10):
+    p, o, _ = step(p, o, jax.tree.map(jnp.asarray, pipe.global_batch_at(i)))
+ok = all(np.array_equal(np.asarray(a), np.asarray(b))
+         for a, b in zip(truth, jax.tree.leaves(p)))
+print(f"post-restore trajectory bit-identical to uninterrupted run: {ok}")
+assert ok
+
+# --- host failure: minimal-movement reassignment ---------------------------
+hosts = ["h0", "h1", "h2", "h3"]
+assign = shard_assignment(hosts, 16)
+new, moved = rebalance(assign, ["h0", "h1", "h3"])
+print(f"h2 died: {len(moved)}/{16} shards moved "
+      f"(only h2's: {moved}); survivors keep their shards")
+
+# --- straggler mitigation ---------------------------------------------------
+mon = StragglerMonitor()
+for _ in range(10):
+    for h, t in [("h0", 1.0), ("h1", 1.02), ("h3", 0.98), ("h2*", 2.4)]:
+        mon.record(h, t)
+shares = mon.work_shares(["h0", "h1", "h3", "h2*"])
+print(f"stragglers detected: {mon.stragglers()}; "
+      f"rebalanced work shares: "
+      + ", ".join(f"{h}={s:.2f}" for h, s in sorted(shares.items())))
+print("demo complete.")

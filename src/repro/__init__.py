@@ -1,0 +1,27 @@
+"""repro — event-driven SNN co-design framework rebuilt as a multi-pod JAX system.
+
+Reproduction of: "Hardware-Software Co-Design for Event-Driven SNN Deployment on
+Low-Cost Neuromorphic FPGAs" (Lee, Alam, Chakraborty, Park — CS.AR 2026),
+adapted from PYNQ-Z2 (Zynq-7020) to TPU v5e-class hardware.
+
+Public API surface (paper Table 2):
+
+    from repro import snn, deploy
+    from repro.core.accelerator import SNNAccelerator
+    from repro.core.reference import SNNReference
+
+    model = snn.SNN(snn.Sequential(snn.Linear(784, 150), snn.LIF(...)), ...)
+    art   = deploy.export(model, "model.npz", calib=images)
+    acc   = SNNAccelerator(art)
+    labels = acc(images)            # module-style forward
+"""
+
+__version__ = "1.0.0"
+
+
+def __getattr__(name):
+    # Lazy so that `import repro` stays cheap and never touches jax device state.
+    if name in ("snn", "deploy"):
+        import importlib
+        return importlib.import_module(f"repro.core.{name}")
+    raise AttributeError(name)

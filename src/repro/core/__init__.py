@@ -1,0 +1,2 @@
+"""core — the paper's contribution: single-artifact SNN deployment with
+bit-exact reference/accelerator agreement and scope-aware measurement."""

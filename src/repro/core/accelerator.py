@@ -1,0 +1,148 @@
+"""Accelerator runtime — the TPU-native "board" path.
+
+Consumes the SAME deployment artifact as the software reference (no
+conversion stage) and executes the padded block layout the planner emitted:
+
+  * ``mode="batch"``  — time-batched execution: the (T, N_in) spike raster is
+    a 0/1 int8 matrix fed to the MXU as one matmul, then the fused LIF scan
+    runs over the (T, N_pad) currents. This is the TPU-native re-thinking of
+    the FPGA's event pipeline: instead of serializing events through a router
+    (which a systolic machine cannot do efficiently), we batch a whole time
+    window into one hardware-shaped matrix product. Throughput-oriented.
+
+  * ``mode="event"`` — event-frame execution: packed (T, E_max) event-id
+    buffers drive per-step gathers of weight rows (HBM->VMEM in the kernel),
+    accumulated into the membrane block. Work scales with ACTIVE events, the
+    paper's event-driven property, and an early-exit loop stops at the first
+    output spike (the TTFS decision point) for latency mode.
+
+  * ``kernel="jnp" | "pallas"`` — the jnp path mirrors the kernel's block
+    structure op-for-op (and is fast on this CPU-only container); the pallas
+    path calls the actual TPU kernels (interpret mode on CPU). Both are
+    bit-exact against the reference; tests assert all three agree.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ttfs
+from repro.core.artifact import Artifact
+from repro.core.events import EventFrames, PAD, pack_events_batched
+from repro.core.lif_dynamics import lif_scan, lif_scan_early_exit
+from repro.core.reference import SNNOutput, _decode
+
+
+class SNNAccelerator:
+    def __init__(self, artifact: Artifact, mode: str = "batch",
+                 kernel: str = "jnp"):
+        if mode not in ("batch", "event"):
+            raise ValueError(mode)
+        if kernel not in ("jnp", "pallas"):
+            raise ValueError(kernel)
+        self.art = artifact
+        self.mode, self.kernel = mode, kernel
+        self.T = int(artifact.m("encode", "T"))
+        self.x_min = float(artifact.m("encode", "x_min"))
+        self.leak_shift = int(artifact.m("lif", "leak_shift"))
+        self.e_max = int(artifact.m("events", "e_max"))
+        self.n_out = int(artifact.m("model", "n_out"))
+        self.w_padded = jnp.asarray(artifact["w_padded"])      # (N_in, N_pad) int8
+        self.thr_padded = jnp.asarray(artifact["thr_padded"])  # (N_pad,) int32
+        self._fwd_batch = jax.jit(self._forward_batch)
+        self._fwd_event = jax.jit(self._forward_event)
+        self._fwd_event_latency = jax.jit(
+            jax.vmap(self._forward_event_one_early_exit))
+
+    # ------------------------------------------------------------ batch mode
+    def _currents_batch(self, raster: jnp.ndarray) -> jnp.ndarray:
+        """(B, T, N_in) int8 raster -> (T, B, N_pad) int32 currents."""
+        if self.kernel == "pallas":
+            from repro.kernels.spike_matmul import ops as smm
+            cur = smm.spike_matmul(raster, self.w_padded)      # (B, T, N_pad)
+        else:
+            cur = jax.lax.dot_general(raster, self.w_padded,
+                                      (((2,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.int32)
+        return jnp.moveaxis(cur, 1, 0)
+
+    def _lif(self, currents: jnp.ndarray):
+        """(T, ..., N_pad) -> LIFResult via fused kernel or its jnp mirror."""
+        if self.kernel == "pallas":
+            from repro.kernels.lif import ops as lif_ops
+            return lif_ops.lif_fused(currents, self.thr_padded, self.leak_shift)
+        return lif_scan(currents, self.thr_padded, self.leak_shift, self.T)
+
+    def _decode_padded(self, first, v_final):
+        first_l, v_l = first[..., :self.n_out], v_final[..., :self.n_out]
+        if self.kernel == "pallas":
+            from repro.kernels.ttfs_decode import ops as dec_ops
+            labels = dec_ops.ttfs_decode(
+                first_l, v_l,
+                n_groups=self.art.m("readout", "n_groups"),
+                per_group=self.art.m("readout", "per_group"),
+                sentinel=self.T, fallback=self.art.m("readout", "fallback"))
+        else:
+            labels = _decode(self.art, first_l, v_l)
+        return labels, first_l, v_l
+
+    def _forward_batch(self, images: jnp.ndarray) -> SNNOutput:
+        times = ttfs.encode_ttfs(images, self.T, self.x_min)
+        raster = ttfs.frames_from_times(times, self.T)
+        currents = self._currents_batch(raster)
+        res = self._lif(currents)
+        labels, first_l, v_l = self._decode_padded(res.first_spike, res.v_final)
+        steps = jnp.full(labels.shape, self.T, jnp.int32)
+        return SNNOutput(labels, first_l, v_l, steps)
+
+    # ------------------------------------------------------------ event mode
+    def _event_currents(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """(T, E_max) event ids -> (T, N_pad) int32 currents via row gather."""
+        if self.kernel == "pallas":
+            from repro.kernels.event_accum import ops as ea
+            return ea.event_accum(ids, self.w_padded)
+        safe = jnp.maximum(ids, 0)
+        rows = self.w_padded[safe].astype(jnp.int32)            # (T, E, N_pad)
+        mask = (ids != PAD)[..., None]
+        return jnp.sum(jnp.where(mask, rows, 0), axis=1)
+
+    def _forward_event(self, ids: jnp.ndarray) -> SNNOutput:
+        """ids: (B, T, E_max). Full-T evaluation (throughput/accuracy mode)."""
+        currents = jax.vmap(self._event_currents)(ids)          # (B, T, N_pad)
+        res = self._lif(jnp.moveaxis(currents, 1, 0))
+        labels, first_l, v_l = self._decode_padded(res.first_spike, res.v_final)
+        steps = jnp.full(labels.shape, self.T, jnp.int32)
+        return SNNOutput(labels, first_l, v_l, steps)
+
+    def _forward_event_one_early_exit(self, ids: jnp.ndarray) -> SNNOutput:
+        """ids: (T, E_max), single example, stop at first output spike."""
+        currents = self._event_currents(ids)                    # (T, N_pad)
+        res, steps = lif_scan_early_exit(currents, self.thr_padded,
+                                         self.leak_shift, self.T)
+        labels, first_l, v_l = self._decode_padded(res.first_spike, res.v_final)
+        return SNNOutput(labels, first_l, v_l, steps)
+
+    # -------------------------------------------------------------- frontend
+    def forward(self, images=None, frames: EventFrames | None = None,
+                latency_mode: bool = False) -> SNNOutput:
+        if self.mode == "batch":
+            assert images is not None, "batch mode consumes dense images"
+            return self._fwd_batch(jnp.asarray(images, jnp.float32))
+        if frames is None:
+            times = np.asarray(ttfs.encode_ttfs(
+                jnp.asarray(images, jnp.float32), self.T, self.x_min))
+            frames = pack_events_batched(times, self.T, self.e_max)
+        if bool(np.any(np.asarray(frames.overflow))):
+            raise OverflowError(
+                "event frames exceed artifact E_max; re-export with larger "
+                "headroom or use the dense batch path")
+        if latency_mode:
+            return self._fwd_event_latency(frames.ids)
+        return self._fwd_event(frames.ids)
+
+    __call__ = forward

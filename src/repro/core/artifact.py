@@ -1,0 +1,105 @@
+"""The single deployment artifact — the paper's central abstraction.
+
+One exported object carries weights, thresholds, connectivity descriptors and
+grouped TTFS decoding metadata, and is consumed UNCHANGED by both the software
+reference runner and the accelerator runtime. There is no board-specific
+conversion stage that could silently change semantics.
+
+Implementation: one ``.npz`` file holding the arrays plus a ``__meta__`` JSON
+blob. The meta carries a manifest of per-array SHA-256 hashes and a whole-
+artifact fingerprint; ``load`` verifies integrity so a corrupted or tampered
+artifact fails loudly instead of silently flipping predictions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+from typing import Any, Mapping
+
+import numpy as np
+
+FORMAT_VERSION = 2
+
+
+def _array_hash(a: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class Artifact:
+    meta: dict[str, Any]
+    arrays: dict[str, np.ndarray]
+
+    # ------------------------------------------------------------------ io
+    def fingerprint(self) -> str:
+        h = hashlib.sha256()
+        for name in sorted(self.arrays):
+            h.update(name.encode())
+            h.update(_array_hash(self.arrays[name]).encode())
+        h.update(json.dumps(_strip_volatile(self.meta), sort_keys=True).encode())
+        return h.hexdigest()
+
+    def save(self, path: str) -> str:
+        meta = dict(self.meta)
+        meta["format_version"] = FORMAT_VERSION
+        meta["manifest"] = {k: _array_hash(v) for k, v in self.arrays.items()}
+        self.meta = meta
+        meta["fingerprint"] = self.fingerprint()
+        buf = io.BytesIO()
+        np.savez(buf, __meta__=np.frombuffer(
+            json.dumps(meta, sort_keys=True).encode(), dtype=np.uint8),
+            **self.arrays)
+        with open(path, "wb") as f:
+            f.write(buf.getvalue())
+        return meta["fingerprint"]
+
+    @classmethod
+    def load(cls, path: str, verify: bool = True) -> "Artifact":
+        with np.load(path) as z:
+            meta = json.loads(bytes(z["__meta__"]).decode())
+            arrays = {k: z[k] for k in z.files if k != "__meta__"}
+        art = cls(meta, arrays)
+        if verify:
+            art.verify()
+        return art
+
+    def verify(self) -> None:
+        manifest = self.meta.get("manifest", {})
+        if set(manifest) != set(self.arrays):
+            raise IntegrityError(
+                f"manifest/array mismatch: {sorted(set(manifest) ^ set(self.arrays))}")
+        for name, digest in manifest.items():
+            actual = _array_hash(self.arrays[name])
+            if actual != digest:
+                raise IntegrityError(f"array {name!r} hash mismatch")
+        fp = self.meta.get("fingerprint")
+        if fp is not None and fp != self.fingerprint():
+            raise IntegrityError("artifact fingerprint mismatch")
+
+    # -------------------------------------------------------- conveniences
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.arrays[name]
+
+    def m(self, *path: str, default=None):
+        """meta lookup: art.m('readout', 'n_groups')"""
+        cur: Any = self.meta
+        for p in path:
+            if not isinstance(cur, Mapping) or p not in cur:
+                return default
+            cur = cur[p]
+        return cur
+
+
+class IntegrityError(RuntimeError):
+    pass
+
+
+def _strip_volatile(meta: dict) -> dict:
+    return {k: v for k, v in meta.items() if k not in ("fingerprint", "manifest")}

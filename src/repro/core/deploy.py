@@ -1,0 +1,144 @@
+"""Export companion to the module graph (paper Table 2: deploy.export /
+deploy.gen_config).
+
+``export`` turns an ``snn.SNN`` into the single deployment artifact:
+
+    1. quantize weights (fp32 -> symmetric int8),
+    2. calibrate integer thresholds on calibration data (small deterministic
+       search maximizing TTFS accuracy — the software side of co-design),
+    3. calibrate the event-buffer depth E_max,
+    4. run the deployment planner and emit the padded block layout
+       (connectivity descriptor),
+    5. write one .npz with weights (fp32 + int8), thresholds, connectivity
+       descriptors, grouped decoding metadata, and integrity manifest.
+
+The SAME file then drives ``SNNReference`` and ``SNNAccelerator``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import codesign, events, quant, snn, ttfs
+from repro.core.artifact import Artifact
+from repro.core.lif_dynamics import lif_scan
+
+
+def gen_config(model: snn.SNN) -> dict:
+    """Deployment metadata for a model (no arrays) — inspection/debug aid."""
+    lin = model.linear_layers()
+    if len(lin) != 1:
+        raise NotImplementedError(
+            "the deployed path supports the paper's topology: exactly one "
+            "Linear stage followed by a LIF stage (deeper/conv models are the "
+            "paper's stated future work)")
+    lif = model.lif_layers()[0] if model.lif_layers() else snn.LIF()
+    leak_shift = quant.leak_shift_from_tau(lif.spec.tau)
+    return {
+        "model": {"topology": "linear-ttfs", "n_in": lin[0].in_features,
+                  "n_out": lin[0].out_features},
+        "encode": {"T": model.encode_t, "x_min": model.x_min},
+        "lif": {"leak_shift": leak_shift, "v_init": 0},
+        "readout": {"n_groups": model.readout.n_groups,
+                    "per_group": model.readout.per_group,
+                    "fallback": model.readout.fallback},
+    }
+
+
+def _ttfs_accuracy(w_int8, thr, leak_shift, T, x_min, images, labels,
+                   n_groups, per_group, fallback) -> float:
+    times = ttfs.encode_ttfs(jnp.asarray(images, jnp.float32), T, x_min)
+    raster = ttfs.frames_from_times(times, T)
+    cur = jax.lax.dot_general(raster, jnp.asarray(w_int8),
+                              (((2,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    res = lif_scan(jnp.moveaxis(cur, 1, 0), jnp.asarray(thr), leak_shift, T)
+    pred = ttfs.decode_labels(res.first_spike, res.v_final, n_groups=n_groups,
+                              per_group=per_group, sentinel=T, fallback=fallback)
+    return float(jnp.mean(pred == jnp.asarray(labels)))
+
+
+def _per_neuron_peaks(w_int8, T, x_min, ls, calib_images) -> np.ndarray:
+    """(B, N) per-neuron peak membrane over the calibration set at leak ls."""
+    times = ttfs.encode_ttfs(jnp.asarray(calib_images, jnp.float32), T, x_min)
+    raster = ttfs.frames_from_times(times, T)
+    cur = jax.lax.dot_general(raster, jnp.asarray(w_int8),
+                              (((2,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    cur = jnp.moveaxis(cur, 1, 0)  # (T, B, N)
+
+    def step(v, i_t):
+        v = v - jnp.right_shift(v, ls) + i_t
+        return v, v
+
+    _, vs = jax.lax.scan(step, jnp.zeros(cur.shape[1:], jnp.int32), cur)
+    return np.asarray(jnp.max(vs, axis=0))
+
+
+def calibrate_thresholds(w_int8: np.ndarray, meta: dict,
+                         calib_images: np.ndarray, calib_labels: np.ndarray,
+                         quantiles=(0.85, 0.9), scales=(0.7, 0.8, 0.9)
+                         ) -> np.ndarray:
+    """Per-neuron threshold calibration (EXPERIMENTS.md §Perf-SNN, +9.2 pp
+    over a global threshold): theta_n = quantile_q over calibration images of
+    neuron n's peak membrane, scaled; the (q, scale, leak) triple with best
+    calibration TTFS accuracy wins. The chosen leak_shift is written back
+    into the metadata (the artifact carries the deployed dynamics).
+    Deterministic; returns per-neuron int32."""
+    T = meta["encode"]["T"]; x_min = meta["encode"]["x_min"]
+    best = (None, -1.0, meta["lif"]["leak_shift"])
+    for ls in sorted({meta["lif"]["leak_shift"], 31}):
+        peaks = _per_neuron_peaks(w_int8, T, x_min, ls, calib_images)
+        for q in quantiles:
+            base = np.quantile(peaks, q, axis=0)
+            for s in scales:
+                thr = np.maximum(1, base * s).astype(np.int32)
+                acc = _ttfs_accuracy(
+                    w_int8, thr, ls, T, x_min, calib_images, calib_labels,
+                    meta["readout"]["n_groups"], meta["readout"]["per_group"],
+                    meta["readout"]["fallback"])
+                if acc > best[1]:
+                    best = (thr, acc, ls)
+    meta["lif"]["leak_shift"] = int(best[2])
+    meta["lif"]["calibration"] = {"method": "per-neuron-peak-quantile",
+                                  "calib_accuracy": float(best[1])}
+    return best[0]
+
+
+def export(model: snn.SNN, path: str | None = None, *,
+           calib_images: np.ndarray, calib_labels: np.ndarray,
+           e_max_headroom: float = 1.0) -> Artifact:
+    meta = gen_config(model)
+    lin = model.linear_layers()[0]
+    if lin.params is None:
+        raise RuntimeError("model has no trained parameters; train first")
+    w_f32 = np.asarray(lin.params["w"], np.float32)
+    w_int8, scale = quant.quantize_weights(w_f32)
+    meta["quant"] = {"scale": scale, "bits": 8, "scheme": "symmetric-per-tensor"}
+
+    thr = calibrate_thresholds(w_int8, meta, calib_images, calib_labels)
+
+    T = meta["encode"]["T"]
+    times = np.asarray(ttfs.encode_ttfs(
+        jnp.asarray(calib_images, jnp.float32), T, meta["encode"]["x_min"]))
+    e_max = events.calibrate_e_max(times, T, headroom=e_max_headroom)
+    meta["events"] = {"e_max": e_max, "pad": events.PAD}
+
+    report = codesign.plan(lin.in_features, lin.out_features)
+    meta["codesign"] = {"lane": report.lane, "n_pad": report.n_pad,
+                        "n_blocks": report.n_blocks,
+                        "vmem_util": report.vmem_util,
+                        "limiter": report.limiter}
+    gids = ttfs.group_map(meta["readout"]["n_groups"], meta["readout"]["per_group"])
+    layout = codesign.blocked_layout(w_int8, thr, gids, report.lane)
+
+    arrays = {"w_float": w_f32, "w_int8": w_int8, "thresholds": thr,
+              "group_ids": gids, **layout}
+    art = Artifact(meta, arrays)
+    if path is not None:
+        art.save(path)
+    else:
+        art.meta["manifest"] = {k: "" for k in arrays}  # filled on save
+    return art

@@ -1,0 +1,68 @@
+"""Hardware constants for the TPU v5e-class target and the paper's FPGA.
+
+All roofline terms, the deployment planner (the Table-1 "resource utilization"
+analogue) and the energy model (the Table-3 analogue) read from here, so the
+assumptions live in exactly one place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuTarget:
+    """TPU v5e-class single-chip budget (assignment constants)."""
+
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12       # FLOP/s per chip
+    hbm_bandwidth: float = 819e9          # bytes/s per chip
+    ici_link_bandwidth: float = 50e9      # bytes/s per link
+    ici_links_per_chip: int = 4           # 2D torus (v5e-class)
+    hbm_bytes: int = 16 * 2**30           # 16 GiB HBM per chip
+    vmem_bytes: int = 32 * 2**20          # ~32 MiB VMEM per core (planner budget)
+    lane_width: int = 128                 # VREG lane dim == MXU tile dim
+    sublane_width: int = 8
+    # Energy model constants (order-of-magnitude, labeled estimates — the
+    # paper's own energy numbers are tool-based estimates too, UG907).
+    pj_per_flop_bf16: float = 0.25
+    pj_per_hbm_byte: float = 60.0
+    pj_per_vmem_byte: float = 1.0     # on-chip (the BRAM-energy analogue)
+    pj_per_ici_byte: float = 120.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FpgaReference:
+    """The paper's deployed design point (PYNQ-Z2 / XC7Z020) — for scope-aware
+    comparisons in the benchmark harness."""
+
+    name: str = "pynq-z2-80mhz"
+    clock_hz: float = 80e6
+    first_spike_cycles: int = 12
+    service_cycles: int = 11
+    service_latency_us: float = 0.1375
+    dynamic_energy_nj: float = 31.6
+    accuracy_pct: float = 87.40
+    neurons_direct: int = 2048            # 16 groups x 128
+    groups: int = 16
+    neurons_per_group: int = 128
+    encodable_neurons: int = 4890
+    packed_synapses: int = 843_776
+    bram_tiles: int = 140                 # saturated — the design is BRAM-limited
+
+
+TPU_V5E = TpuTarget()
+PYNQ_Z2 = FpgaReference()
+
+
+def matmul_flops(m: int, k: int, n: int) -> int:
+    return 2 * m * k * n
+
+
+def dyn_energy_joules(flops: float, hbm_bytes: float, ici_bytes: float = 0.0,
+                      target: TpuTarget = TPU_V5E) -> float:
+    """Dynamic-energy *estimate* (J) from the counter model. Labeled estimate,
+    mirroring the paper's Vivado-based PL-dynamic estimates."""
+    return (flops * target.pj_per_flop_bf16
+            + hbm_bytes * target.pj_per_hbm_byte
+            + ici_bytes * target.pj_per_ici_byte) * 1e-12

@@ -1,0 +1,88 @@
+"""Integer LIF dynamics — the single source of truth for both runtimes.
+
+Per timestep t (all int32, deterministic):
+
+    v      <- v - (v >> leak_shift) + I_t          # arithmetic shift leak
+    fired  <- (v >= threshold) and (first == T)    # threshold compare
+    first  <- t where fired else first             # first-spike latch
+
+``first == T`` is the no-spike sentinel. Negative membrane uses arithmetic
+right shift (rounds toward -inf) — chosen because it is what the fixed-point
+RTL implements; both runtimes and the Pallas kernel reproduce it exactly.
+
+The software reference runner evaluates this with a dense (T, N) current
+matrix; the accelerator runtime evaluates the same recurrence over the padded
+block layout (and in the fused Pallas kernel). Bit-exact agreement of
+``first`` and ``v`` between the paths is asserted by tests and by the
+full-test-set agreement harness.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LIFResult(NamedTuple):
+    first_spike: jnp.ndarray  # (..., N) int32, T = never fired
+    v_final: jnp.ndarray      # (..., N) int32
+
+
+def lif_scan(currents: jnp.ndarray, thresholds: jnp.ndarray,
+             leak_shift: int, T: int) -> LIFResult:
+    """currents: (T, ..., N) int32 synaptic input per step."""
+    n_shape = currents.shape[1:]
+    v0 = jnp.zeros(n_shape, jnp.int32)
+    first0 = jnp.full(n_shape, T, jnp.int32)
+
+    def step(carry, xs):
+        v, first = carry
+        t, i_t = xs
+        v = v - jnp.right_shift(v, leak_shift) + i_t
+        fired = (v >= thresholds) & (first == T)
+        first = jnp.where(fired, t, first)
+        return (v, first), None
+
+    ts = jnp.arange(T, dtype=jnp.int32)
+    (v, first), _ = jax.lax.scan(step, (v0, first0), (ts, currents))
+    return LIFResult(first_spike=first, v_final=v)
+
+
+def lif_scan_early_exit(currents: jnp.ndarray, thresholds: jnp.ndarray,
+                        leak_shift: int, T: int) -> tuple[LIFResult, jnp.ndarray]:
+    """Event-driven latency mode: stop integrating once ANY neuron has fired
+    (the grouped TTFS decision is determined by the earliest spike, so later
+    steps cannot change the label unless nothing ever fires — in which case
+    the loop runs to T and the membrane fallback applies, exactly as in the
+    full scan).
+
+    Returns (LIFResult, steps_executed). Labels decoded from the result are
+    bit-identical to the full scan's: unfired neurons keep the sentinel, and
+    argmin over groups only consults the earliest time.
+
+    Note: v_final here is the membrane AT EXIT TIME, which differs from the
+    full scan's v_final when exiting early — but the membrane fallback is only
+    consulted when no spike occurred, i.e. when no early exit happened, so the
+    decode rule sees identical inputs either way.
+    """
+    n_shape = currents.shape[1:]
+
+    def cond(state):
+        t, v, first = state
+        return (t < T) & jnp.all(first == T)
+
+    def body(state):
+        t, v, first = state
+        i_t = jax.lax.dynamic_index_in_dim(currents, t, axis=0, keepdims=False)
+        v = v - jnp.right_shift(v, leak_shift) + i_t
+        fired = (v >= thresholds) & (first == T)
+        first = jnp.where(fired, t, first)
+        return (t + 1, v, first)
+
+    t0 = jnp.int32(0)
+    v0 = jnp.zeros(n_shape, jnp.int32)
+    first0 = jnp.full(n_shape, T, jnp.int32)
+    t, v, first = jax.lax.while_loop(cond, body, (t0, v0, first0))
+    return LIFResult(first_spike=first, v_final=v), t

@@ -1,0 +1,141 @@
+"""PyTorch-aligned SNN model construction (paper Table 2, left column).
+
+    snn.SNN, snn.Sequential, snn.Linear, snn.LIF
+        ~ nn.Module, nn.Sequential, nn.Linear + activation stage
+
+Modules are torch-like to *hold* (shapes, hyperparameters, initialized
+parameters) and jax-functional to *run*: `module.init(key)` returns a params
+pytree and `module.apply(params, x)` is pure, so jax.grad/jit work untouched.
+`module(x)` uses the module's own params for torch-style convenience.
+
+The deployed subset matches the paper: Linear (dense synapse matrix) + LIF
+(integrate-and-fire stage). The export companion (`repro.core.deploy`) turns
+an `snn.SNN` into the single deployment artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Module:
+    """Minimal nn.Module-style base: subclasses define init/apply."""
+
+    def init(self, key: jax.Array) -> Any:
+        raise NotImplementedError
+
+    def apply(self, params: Any, x: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        if getattr(self, "params", None) is None:
+            raise RuntimeError("module has no bound params; call .bind(params) "
+                               "or construct with a key")
+        return self.apply(self.params, x)
+
+    def bind(self, params: Any) -> "Module":
+        self.params = params
+        return self
+
+
+class Linear(Module):
+    """Dense synapse matrix: y = x @ W.  No bias — the deployed classifier
+    carries weights and thresholds only (paper §2.2)."""
+
+    def __init__(self, in_features: int, out_features: int, key: jax.Array | None = None):
+        self.in_features = in_features
+        self.out_features = out_features
+        self.params = None if key is None else self.init(key)
+
+    def init(self, key: jax.Array):
+        # Kaiming-uniform-ish, matching torch's default fan-in scaling.
+        bound = 1.0 / np.sqrt(self.in_features)
+        w = jax.random.uniform(key, (self.in_features, self.out_features),
+                               jnp.float32, -bound, bound)
+        return {"w": w}
+
+    def apply(self, params, x):
+        return x @ params["w"]
+
+
+@dataclasses.dataclass
+class LIFSpec:
+    """LIF stage hyper-parameters (all deployment-artifact fields)."""
+    threshold: float = 1.0          # float threshold used during training
+    tau: float = 16.0               # leak time constant in steps (-> leak_shift)
+    t_steps: int = 32               # simulation window T
+
+
+class LIF(Module):
+    """Leaky integrate-and-fire stage. In the *training* graph this acts as a
+    dense surrogate (identity on synaptic currents — the TTFS decision rule is
+    trained through the dense proxy, exactly how the paper's dense GPU/CPU
+    baselines execute the same exported parameters). The *deployed* spiking
+    dynamics live in the integer runtimes (reference.py / accelerator.py)."""
+
+    def __init__(self, spec: LIFSpec | None = None, **kw):
+        self.spec = spec or LIFSpec(**kw)
+        self.params = {}
+
+    def init(self, key):
+        return {}
+
+    def apply(self, params, x):
+        return x  # dense-proxy surrogate; spiking semantics are runtime-side
+
+
+class Sequential(Module):
+    def __init__(self, *layers: Module):
+        self.layers = list(layers)
+        if all(getattr(l, "params", None) is not None for l in self.layers):
+            self.params = [l.params for l in self.layers]
+        else:
+            self.params = None
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.layers))
+        return [l.init(k) for l, k in zip(self.layers, keys)]
+
+    def apply(self, params, x):
+        for l, p in zip(self.layers, params):
+            x = l.apply(p, x)
+        return x
+
+
+@dataclasses.dataclass
+class ReadoutSpec:
+    """Grouped TTFS readout metadata (paper §2.3: 10 classes x 15 neurons)."""
+    n_groups: int = 10
+    per_group: int = 15
+    fallback: str = "membrane"
+
+
+class SNN(Module):
+    """Top-level model: a Sequential body + readout metadata. This is the
+    object `deploy.export` consumes."""
+
+    def __init__(self, body: Sequential, readout: ReadoutSpec | None = None,
+                 encode_t: int = 32, x_min: float = 1.0 / 255.0):
+        self.body = body
+        self.readout = readout or ReadoutSpec()
+        self.encode_t = encode_t
+        self.x_min = x_min
+        self.params = body.params
+
+    def init(self, key):
+        return self.body.init(key)
+
+    def apply(self, params, x):
+        return self.body.apply(params, x)
+
+    # -- introspection used by deploy.export -------------------------------
+    def linear_layers(self) -> Sequence[Linear]:
+        return [l for l in self.body.layers if isinstance(l, Linear)]
+
+    def lif_layers(self) -> Sequence[LIF]:
+        return [l for l in self.body.layers if isinstance(l, LIF)]

@@ -1,0 +1,74 @@
+"""Time-to-first-spike (TTFS) encoding and grouped decoding.
+
+Semantics are INTEGER and deterministic: both the software reference and the
+accelerator runtime call these exact functions (or kernels proven equal to
+them), which is what makes full-test-set prediction agreement a meaningful
+claim rather than a float-tolerance accident.
+
+Encoding (input layer): pixel intensity x in [0,1] maps to spike time
+    t = floor((1 - x) * (T - 1))            if x >= x_min   (brighter => earlier)
+    t = T  (sentinel: never spikes)          otherwise
+Each input neuron spikes at most once — the TTFS contract.
+
+Decoding (output layer, paper §2.3): 150 output neurons = 10 class groups x 15.
+The decoded label is the group containing the earliest first output spike;
+ties break to the lowest group id (argmin's first-index rule — deterministic).
+If no output neuron spikes, an artifact-selected fallback applies:
+    "membrane": argmax of group-max final membrane potential (integer compare)
+    "zero":     label 0 (the degenerate but deterministic choice)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def encode_ttfs(images: jnp.ndarray, T: int, x_min: float = 1.0 / 255.0) -> jnp.ndarray:
+    """images (..., N_in) float in [0,1] -> spike times (..., N_in) int32 in [0, T].
+
+    T is the no-spike sentinel."""
+    x = jnp.clip(images, 0.0, 1.0)
+    t = jnp.floor((1.0 - x) * (T - 1)).astype(jnp.int32)
+    return jnp.where(x >= x_min, t, jnp.int32(T))
+
+
+def frames_from_times(times: jnp.ndarray, T: int) -> jnp.ndarray:
+    """(..., N) int32 spike times -> (..., T, N) int8 spike raster (one spike max)."""
+    steps = jnp.arange(T, dtype=jnp.int32)
+    raster = times[..., None, :] == steps[:, None]
+    return raster.astype(jnp.int8)
+
+
+def group_map(n_groups: int, per_group: int) -> np.ndarray:
+    """Neuron -> group id for contiguous grouping (paper: 10 groups x 15)."""
+    return np.repeat(np.arange(n_groups, dtype=np.int32), per_group)
+
+
+def grouped_first_spike(first_spike: jnp.ndarray, n_groups: int, per_group: int,
+                        sentinel: int) -> jnp.ndarray:
+    """(..., G*P) first-spike times -> (..., G) per-group earliest time."""
+    shaped = first_spike.reshape(first_spike.shape[:-1] + (n_groups, per_group))
+    del sentinel  # min over the group keeps the sentinel if none spiked
+    return jnp.min(shaped, axis=-1)
+
+
+def decode_labels(first_spike: jnp.ndarray, v_final: jnp.ndarray, *,
+                  n_groups: int, per_group: int, sentinel: int,
+                  fallback: str = "membrane") -> jnp.ndarray:
+    """Grouped TTFS readout -> (...,) int32 labels.
+
+    first_spike: (..., G*P) int32 times (sentinel = no spike)
+    v_final:     (..., G*P) int32 final membrane potentials (fallback evidence)
+    """
+    gmin = grouped_first_spike(first_spike, n_groups, per_group, sentinel)
+    ttfs_label = jnp.argmin(gmin, axis=-1).astype(jnp.int32)  # first-index tiebreak
+    any_spike = jnp.min(gmin, axis=-1) < sentinel
+    if fallback == "membrane":
+        gv = v_final.reshape(v_final.shape[:-1] + (n_groups, per_group))
+        fb_label = jnp.argmax(jnp.max(gv, axis=-1), axis=-1).astype(jnp.int32)
+    elif fallback == "zero":
+        fb_label = jnp.zeros_like(ttfs_label)
+    else:
+        raise ValueError(f"unknown fallback {fallback!r}")
+    return jnp.where(any_spike, ttfs_label, fb_label)

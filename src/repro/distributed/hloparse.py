@@ -1,0 +1,125 @@
+"""Post-optimization HLO text parser with while-loop trip-count scaling.
+
+XLA's HloCostAnalysis (and a naive text grep) counts a while body ONCE —
+but our layer stack is a lax.scan, so per-layer collectives (FSDP weight
+all-gathers, TP all-reduces) execute n_periods times per step. This parser:
+
+  1. splits the module text into named computations,
+  2. records collective result bytes per computation,
+  3. finds `while` ops, reads the trip count from the largest s32 constant
+     in the condition computation (jax lowers scan bounds there),
+  4. recursively totals: entry + trip * body (nested scans handled).
+
+Shapes in the partitioned module are per-device, so the result is per-chip
+collective bytes. Wire model: all-reduce counts 2x (ring reduce-scatter +
+all-gather), other collectives 1x.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# computation header: "<name> (params...) -> result {"; params may nest
+# parens (tuple types), so split on the first "(" of a non-instruction line.
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-$]+)\s*\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_WHILE = re.compile(r"\bwhile\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_S32_CONST = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALL = re.compile(r"\b(?:call|fusion)\(.*?calls=%?([\w.\-]+)")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    coll_bytes: dict = field(default_factory=dict)   # kind -> bytes (one pass)
+    whiles: list = field(default_factory=list)        # (cond_name, body_name)
+    calls: list = field(default_factory=list)
+    max_s32_const: int = 0
+
+
+def parse_module(hlo: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry = None
+    for line in hlo.splitlines():
+        is_header = (line.rstrip().endswith("{") and "->" in line
+                     and " = " not in line and not line.startswith("HloModule"))
+        if is_header:
+            hdr = _COMP_HDR.match(line)
+            if hdr:
+                cur = Computation(hdr.group(1))
+                comps[cur.name] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _COLLECTIVE.search(line)
+        if m:
+            b = _shape_bytes(m.group(1))
+            cur.coll_bytes[m.group(2)] = cur.coll_bytes.get(m.group(2), 0) + b
+        w = _WHILE.search(line)
+        if w:
+            cur.whiles.append((w.group(1), w.group(2)))
+        c = _CALL.search(line)
+        if c:
+            cur.calls.append(c.group(1))
+        for sc in _S32_CONST.findall(line):
+            cur.max_s32_const = max(cur.max_s32_const, int(sc))
+    return comps, entry or ""
+
+
+def collective_bytes_scaled(hlo: str) -> dict[str, float]:
+    """Per-chip collective result bytes by kind, with while bodies multiplied
+    by their trip counts."""
+    comps, entry = parse_module(hlo)
+
+    def total(name: str, seen: tuple = ()) -> dict[str, float]:
+        if name not in comps or name in seen:
+            return {}
+        comp = comps[name]
+        out = {k: float(v) for k, v in comp.coll_bytes.items()}
+        for callee in comp.calls:
+            for k, v in total(callee, seen + (name,)).items():
+                out[k] = out.get(k, 0.0) + v
+        for cond, body in comp.whiles:
+            trip = max(comps.get(cond, Computation(cond)).max_s32_const, 1)
+            inner = total(body, seen + (name,))
+            for k, v in inner.items():
+                out[k] = out.get(k, 0.0) + trip * v
+        return out
+
+    return total(entry)
+
+
+def wire_bytes(coll: dict[str, float]) -> float:
+    return sum(2.0 * v if k == "all-reduce" else v for k, v in coll.items())
+
+
+def count_ops(hlo: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\b", hlo))

@@ -1,0 +1,280 @@
+"""Divisibility-aware sharding resolver (MaxText-style logical rules, but
+with explicit fallback chains so EVERY assigned config shards cleanly).
+
+Why fallbacks are load-bearing here (DESIGN.md §5):
+  * GQA KV heads are 4/6/8 across the pool — none divide the 16-way model
+    axis. Fallback: shard head_dim (128/16=8) instead; attention contractions
+    over head_dim become partial-sum + all-reduce, which GSPMD inserts.
+  * qwen2.5-32b has 40 query heads (!%16). Same fallback.
+  * whisper vocab 51865 and internvl2 vocab 92553 are not 16-divisible:
+    embedding/logits fall back to replicated vocab + data-sharded d_model.
+  * Mixtral has 8 experts (!%16): expert FFN shards d_ff_expert instead.
+
+Parameters use TP("model") x FSDP(data axes): one dim on "model", a second
+dim on ("pod","data") — ZeRO-3 semantics (XLA all-gathers weight shards per
+layer and reduce-scatters grads). Stacked-layer leading dims are never
+sharded (they are scanned over).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --------------------------------------------------------------- helpers
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % axis_size(mesh, axes) == 0
+
+
+def resolve_axis(mesh: Mesh, dim: int, logical):
+    """logical: None | 'model' | 'data' | tuple of fallback candidates.
+    'data' means the full data-parallel prefix (pod+data)."""
+    if logical is None:
+        return None
+    candidates = logical if isinstance(logical, tuple) else (logical,)
+    for cand in candidates:
+        if cand is None:
+            return None
+        mesh_axes = dp_axes(mesh) if cand == "data" else (cand,)
+        mesh_axes = tuple(a for a in mesh_axes if a in mesh.axis_names)
+        if not mesh_axes:
+            continue
+        if _fits(dim, mesh, mesh_axes):
+            return mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+    return None
+
+
+def spec(mesh: Mesh, shape, logical_axes) -> P:
+    """Build a PartitionSpec with per-dim divisibility fallback, ensuring no
+    mesh axis is used twice."""
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used: set[str] = set()
+    out = []
+    for dim, logical in zip(shape, logical_axes):
+        r = resolve_axis(mesh, dim, logical)
+        flat = (r,) if isinstance(r, str) else (r or ())
+        if r is not None and not (set(flat) & used):
+            out.append(r)
+            used.update(flat)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def make_constrainer(mesh: Mesh):
+    """The callback models use: constrain(x, logical_axes). Carries the mesh
+    (``constrain.mesh``) so shard_map-based layers can bind to it without
+    models importing mesh construction."""
+    def constrain(x, logical_axes):
+        s = spec(mesh, x.shape, tuple(logical_axes))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+    constrain.mesh = mesh
+    return constrain
+
+
+# ------------------------------------------------- parameter sharding rules
+# Suffix-matched rules: (regex on the flattened path) -> logical axes for the
+# TRAILING dims (leading stack dims are replicated automatically).
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # embeddings / head
+    (r"embed$",         (("model", None), "data")),
+    (r"lm_head$",       ("data", ("model", None))),
+    # attention projections (d, F) / (F, d)
+    (r"(wq|wk|wv|x_wq|x_wk|x_wv)$", ("data", ("model", None))),
+    (r"(wo|x_wo)$",     (("model", None), "data")),
+    # dense FFN
+    (r"(w_gate|w_up|w_in)$",  ("data", ("model", None))),
+    (r"(w_down|w_out)$",      (("model", None), "data")),
+    # MoE experts (E, d, f) / (E, f, d) — E first, fall back to f
+    (r"experts.*",      ()),   # placeholder, handled dimension-wise below
+    (r"router$",        ("data", None)),
+    # mamba
+    (r"in_proj$",       ("data", ("model", None))),
+    (r"out_proj$",      (("model", None), "data")),
+    (r"conv_w$",        (None, ("model", None))),
+    # biases / norms / scalars -> replicated
+]
+
+
+def _param_logical(path: str, shape) -> tuple:
+    nd = len(shape)
+    base = None
+    for pat, rule in _PARAM_RULES:
+        if re.search(pat, path):
+            base = rule
+            break
+    # MoE expert tensors are 4D: (n_periods, E, d, f). The ndim>=4 guard is
+    # load-bearing: dense stacked FFN weights are 3D (L, d, f), and treating
+    # L as an expert dim sharded the layer stack over "model" — every use
+    # then regathered the FULL stack inside the scan loop (found via the
+    # §Perf HLO audit; dominated every dense train cell's collective term).
+    if re.search(r"(w_gate|w_up|w_down)$", path) and nd >= 4 \
+            and "blocks" in path:
+        # (..., E, a, b): prefer E on model; fallback to the wide dim
+        if re.search(r"w_down$", path):
+            tail = (("model", None), (None,), "data")
+            tail = (("model", None), ("model", None), "data")
+        else:
+            tail = (("model", None), "data", ("model", None))
+        lead = (None,) * (nd - 3)
+        return lead + tail
+    if base is None or len(base) == 0:
+        if nd >= 2:
+            base = ("data", ("model", None))     # generic (in, out)
+        else:
+            return (None,) * nd
+    lead = (None,) * (nd - len(base))
+    return lead + tuple(base)
+
+
+def _dedup(mesh: Mesh, shape, logical) -> P:
+    return spec(mesh, shape, logical)
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _strip_data(logical) -> tuple:
+    """Remove FSDP ('data') requests from a logical-axes tuple (TP-only)."""
+    out = []
+    for l in logical:
+        if l == "data":
+            out.append(None)
+        elif isinstance(l, tuple):
+            kept = tuple(x for x in l if x != "data")
+            out.append(kept if kept else None)
+        else:
+            out.append(l)
+    return tuple(out)
+
+
+def param_pspecs(mesh: Mesh, params_tree, *, fsdp: bool = True,
+                 fsdp_mode: str = "hidden") -> Any:
+    """PartitionSpec pytree for a (possibly abstract) params/opt-state tree.
+
+    fsdp=True, fsdp_mode="hidden" (baseline): TP("model") x ZeRO-3 on a
+    hidden weight dim. Measured pathology: XLA all-gathers the FULL stacked
+    weight inside the layer loop (per iteration!) when the sliced stack's
+    hidden dim is data-sharded — dominating every baseline train cell.
+
+    fsdp_mode="stack" (§Perf variant): shard the layer-STACK dim (axis 0 of
+    blocks/*) over the data axes instead. dynamic_slice then addresses one
+    layer shard and the per-iteration gather is O(params/L), not O(params).
+
+    fsdp=False ('tp_only'): weights shard on "model" only — valid whenever
+    params + optimizer state fit per-chip HBM (tp_only_fits decides)."""
+    def per(path, leaf):
+        p = path_str(path)
+        if leaf.ndim == 0:
+            return P()
+        logical = _param_logical(p, leaf.shape)
+        if not fsdp:
+            logical = _strip_data(logical)
+        elif fsdp_mode == "stack" and "blocks" in p and leaf.ndim >= 3:
+            stack = leaf.shape[0]
+            logical = ("data",) + _strip_data(logical)[1:]
+            if resolve_axis(mesh, stack, "data") is None:
+                # stack not divisible (e.g. 9 jamba periods): keep hidden FSDP
+                logical = _param_logical(p, leaf.shape)
+        return _dedup(mesh, leaf.shape, logical)
+    return jax.tree_util.tree_map_with_path(per, params_tree)
+
+
+def param_shardings(mesh: Mesh, params_tree, *, fsdp: bool = True):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(mesh, params_tree, fsdp=fsdp))
+
+
+def tp_only_fits(cfg, mesh, hbm_bytes: int, frac: float = 0.35) -> bool:
+    """Co-design check (the planner's job, same spirit as the paper's
+    BRAM-limited verdict): do TP-only params + optimizer state fit the HBM
+    budget? If yes, FSDP's collective cost buys nothing."""
+    model_ways = axis_size(mesh, ("model",))
+    p_bytes = 2.0 * cfg.param_count() / model_ways             # bf16
+    opt_mult = {"adamw": 4.0, "adafactor": 0.1, "sgd": 2.0}[cfg.optimizer]
+    state = opt_mult * 2.0 * cfg.param_count() / model_ways
+    return (p_bytes + state) <= frac * hbm_bytes
+
+
+# ------------------------------------------------------------ cache/batch
+def batch_pspec(mesh: Mesh, batch_tree) -> Any:
+    def per(leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        ax = resolve_axis(mesh, b, "data")
+        return P(ax, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(per, batch_tree)
+
+
+def cache_pspecs(mesh: Mesh, cache_tree, *, seq_shard: bool = False) -> Any:
+    """KV/SSM cache sharding. Layout: attn k/v (periods, B, Hkv, S, D);
+    mamba state (periods, B, H, N, P), conv (periods, B, K-1, ch).
+    Preference: batch on data; heads on model (fallback head_dim/state-dim);
+    if batch can't shard (B=1 long-context), shard the sequence dim on data.
+
+    seq_shard=True (the §Perf "flash-decode" variant): shard the cache
+    SEQUENCE dim on "model" instead of head_dim. Decode attention then
+    reduces over the sharded S — GSPMD turns the softmax/PV into partial
+    sums + tiny (B,H,1,*) all-reduces instead of repartitioning the whole
+    cache (the 'involuntary full rematerialization' the baseline hits)."""
+    def per(path, leaf):
+        p = path_str(path)
+        if leaf.ndim == 0:
+            return P()
+        if p.endswith("len"):
+            return P()
+        if "state" in p:   # (periods, B, H, N, Pdim)
+            return spec(mesh, leaf.shape,
+                        (None, "data", ("model", None), None, None))
+        if "conv" in p:    # (periods, B, K-1, ch)
+            return spec(mesh, leaf.shape,
+                        (None, "data", None, ("model", None)))
+        # attention caches (periods, B, Hkv, S, D)
+        b, s = leaf.shape[1], leaf.shape[3]
+        if seq_shard:
+            batch_ax = "data" if resolve_axis(mesh, b, "data") else None
+            return spec(mesh, leaf.shape,
+                        (None, batch_ax, None, ("model", None), None))
+        if resolve_axis(mesh, b, "data") is not None:
+            return spec(mesh, leaf.shape,
+                        (None, "data", ("model", None), None,
+                         (None if _fits(leaf.shape[2], mesh, ("model",))
+                          else "model")))
+        # B=1: sequence-shard the cache on the data axes
+        return spec(mesh, leaf.shape,
+                    (None, None, ("model", None), "data",
+                     (None if _fits(leaf.shape[2], mesh, ("model",))
+                      else "model")))
+    return jax.tree_util.tree_map_with_path(per, cache_tree)
+
+
+def to_shardings(mesh: Mesh, pspec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,28 @@
+"""Shared kernel plumbing: interpret-mode selection and padding helpers.
+
+All kernels TARGET TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+VALIDATED on CPU via interpret=True, per the container contract.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pad_dim(x: jnp.ndarray, axis: int, multiple: int, value=0) -> jnp.ndarray:
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b

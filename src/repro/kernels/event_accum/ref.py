@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for event-driven accumulation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.events import PAD
+
+
+def event_accum_ref(ids: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """ids (T, E_max) int32 (PAD=-1), w (N_in, N_pad) int8 -> (T, N_pad) int32."""
+    safe = jnp.maximum(ids, 0)
+    rows = w[safe].astype(jnp.int32)                 # (T, E, N_pad)
+    mask = (ids != PAD)[..., None]
+    return jnp.sum(jnp.where(mask, rows, 0), axis=1)

@@ -1,0 +1,121 @@
+"""Blocked online-softmax attention (flash-style) for the LM zoo.
+
+TPU-native tiling: grid (B, Hq, Sq/bq, Skv/bk) with the KV dimension
+innermost; running max / sum / accumulator live in VMEM scratch so the
+softmax never materializes the (Sq, Skv) score matrix in HBM. Supports:
+
+  * causal masking with a query offset (prefill: offset 0; decode: offset
+    Skv - Sq so the single query row sits at the end of the KV cache),
+  * sliding-window attention (Mixtral-style SWA) — kv younger than
+    (qpos - window) is masked, which is what makes long-context linear,
+  * GQA via the KV BlockSpec index map (kv_head = q_head // group_size) —
+    no KV replication in memory.
+
+bq = bk = 128 blocks, f32 accumulation, bf16/f32 inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  q_offset: int, bq: int, bk: int, kv_blocks: int,
+                  kv_len: int):
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_idx = pl.program_id(2)
+    qpos = q_offset + q_idx * bq + jax.lax.iota(jnp.int32, bq)      # (bq,)
+    kpos = kb * bk + jax.lax.iota(jnp.int32, bk)                    # (bk,)
+
+    # Static block-level relevance: skip blocks fully masked by causality or
+    # the sliding window. (Computed on traced program ids — resolved to a
+    # cheap scalar predicate at run time, zero work when false.)
+    first_q = q_offset + q_idx * bq
+    last_q = first_q + bq - 1
+    first_k = kb * bk
+    last_k = first_k + bk - 1
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= first_k <= last_q
+    if window is not None:
+        relevant &= last_k >= first_q - window + 1
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale                 # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                         # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)                         # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))     # (bq, bk)
+        mask = kpos[None, :] < kv_len
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                                         # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                                      # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                             # (bq, 1)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(kb == kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        out = acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, window: int | None = None,
+                           q_offset: int = 0, kv_len: int | None = None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q (B, Hq, Sq, D), k/v (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+    Sq % bq == 0, Skv % bk == 0 (ops wrapper pads). kv_len masks KV padding."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0 and Sq % bq == 0 and Skv % bk == 0
+    group = Hq // Hkv
+    kv_blocks = Skv // bk
+    kv_len = Skv if kv_len is None else kv_len
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk, kv_blocks=kv_blocks, kv_len=kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, Sq // bq, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki, g=group: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

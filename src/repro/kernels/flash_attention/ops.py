@@ -1,0 +1,28 @@
+"""Jitted public wrapper: pads seq/head dims to block multiples."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_dim, use_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """q (B, Hq, Sq, D), k/v (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    Skv = k.shape[2]
+    bq = min(128, max(8, Sq))
+    qp = pad_dim(q, 2, bq)
+    kp = pad_dim(k, 2, 128)
+    vp = pad_dim(v, 2, 128)
+    out = flash_attention_kernel(
+        qp, kp, vp, causal=causal, window=window, q_offset=q_offset,
+        kv_len=Skv, bq=bq, bk=128, interpret=use_interpret())
+    return out[:, :, :Sq, :]

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle: dense masked attention with f32 softmax."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True, window: int | None = None,
+                        q_offset: int = 0, kv_len: int | None = None) -> jnp.ndarray:
+    """q (B, Hq, Sq, D), k/v (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    kv_len = Skv if kv_len is None else kv_len
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (D ** 0.5)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    mask = (kpos[None, :] < kv_len)
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    # rows with no visible kv (possible under SWA offsets) -> zero output
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

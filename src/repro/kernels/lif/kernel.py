@@ -1,0 +1,70 @@
+"""Fused LIF kernel — membrane update + threshold compare + first-spike latch.
+
+The FPGA evaluates one neuron group (128 neurons) per cycle against BRAM-held
+state. The TPU-native tiling is the same co-design sweet spot: one 128-lane
+neuron block per grid step, whole time window resident in VMEM, the T-loop
+fused inside the kernel so membrane state never round-trips to HBM.
+
+    grid  = (B, N_pad // bn)
+    currents block (1, T, bn) int32   VMEM   (T*bn*4 B; T=32,bn=128 -> 16 KiB)
+    thresholds     (bn,)       int32  VMEM
+    out: first_spike (1, bn) int32, v_final (1, bn) int32
+
+Integer semantics identical to core.lif_dynamics.lif_scan:
+    v <- v - (v >> leak_shift) + I_t ; fire at v >= thr ; latch first time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lif_kernel(cur_ref, thr_ref, first_ref, v_ref, *, T: int, leak_shift: int):
+    bn = thr_ref.shape[0]
+    thr = thr_ref[...]
+
+    def step(t, carry):
+        v, first = carry
+        i_t = cur_ref[0, t, :].astype(jnp.int32)
+        v = v - jnp.right_shift(v, leak_shift) + i_t
+        fired = (v >= thr) & (first == T)
+        first = jnp.where(fired, t, first)
+        return (v, first)
+
+    v0 = jnp.zeros((bn,), jnp.int32)
+    f0 = jnp.full((bn,), T, jnp.int32)
+    v, first = jax.lax.fori_loop(0, T, step, (v0, f0))
+    first_ref[0, :] = first
+    v_ref[0, :] = v
+
+
+def lif_fused_kernel(currents: jnp.ndarray, thresholds: jnp.ndarray,
+                     leak_shift: int, *, block_n: int = 128,
+                     interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """currents (B, T, N_pad) int32, thresholds (N_pad,) int32
+    -> (first_spike (B, N_pad) int32, v_final (B, N_pad) int32)."""
+    B, T, N = currents.shape
+    assert N % block_n == 0, f"N_pad {N} must be a multiple of {block_n}"
+    grid = (B, N // block_n)
+    kernel = functools.partial(_lif_kernel, T=T, leak_shift=leak_shift)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, block_n), lambda b, n: (b, 0, n)),
+            pl.BlockSpec((block_n,), lambda b, n: (n,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda b, n: (b, n)),
+            pl.BlockSpec((1, block_n), lambda b, n: (b, n)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N), jnp.int32),
+            jax.ShapeDtypeStruct((B, N), jnp.int32),
+        ],
+        interpret=interpret,
+    )(currents, thresholds)

@@ -1,0 +1,30 @@
+"""Jitted public wrapper for the fused LIF kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif_dynamics import LIFResult
+from repro.kernels.common import use_interpret
+from repro.kernels.lif.kernel import lif_fused_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("leak_shift",))
+def _lif_fused(currents_btn: jnp.ndarray, thresholds: jnp.ndarray,
+               leak_shift: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return lif_fused_kernel(currents_btn, thresholds, leak_shift,
+                            interpret=use_interpret())
+
+
+def lif_fused(currents: jnp.ndarray, thresholds: jnp.ndarray,
+              leak_shift: int) -> LIFResult:
+    """currents (T, B, N_pad) int32 (scan layout) -> LIFResult over (B, N_pad).
+
+    Accepts the same layout core.lif_dynamics.lif_scan uses so the
+    accelerator can swap implementations freely."""
+    c = jnp.moveaxis(currents, 0, 1)  # (B, T, N)
+    first, v = _lif_fused(c, thresholds, leak_shift)
+    return LIFResult(first_spike=first, v_final=v)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused LIF kernel (defers to the single source of
+truth in core.lif_dynamics)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.lif_dynamics import lif_scan
+
+
+def lif_fused_ref(currents: jnp.ndarray, thresholds: jnp.ndarray,
+                  leak_shift: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """currents (B, T, N) int32 -> (first_spike (B, N), v_final (B, N))."""
+    T = currents.shape[1]
+    res = lif_scan(jnp.moveaxis(currents, 1, 0), thresholds[None, :],
+                   leak_shift, T)
+    return res.first_spike, res.v_final

@@ -1,0 +1,58 @@
+"""Time-batched spike matmul — the MXU-native event pipeline.
+
+The FPGA serializes events through a router because its datapath is scalar-
+per-cycle. A systolic MXU wants the opposite: batch the whole T-step spike
+window into a dense 0/1 int8 matrix and evaluate all synaptic currents as ONE
+hardware-shaped matmul. This is the central hardware adaptation of the paper
+(DESIGN.md §2): same integer semantics, reshaped for the target's compute
+geometry.
+
+    raster (M, K) int8 {0,1}  x  W (K, N) int8  ->  currents (M, N) int32
+    M = B*T flattened spike rows, K = N_in (padded to 128), N = N_pad.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost with an int32 VMEM accumulator
+initialized at k==0 — MXU-aligned (128 multiples), accumulation stays on-chip.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _smm_kernel(x_ref, w_ref, o_ref, *, k_blocks: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+def spike_matmul_kernel(raster: jnp.ndarray, w: jnp.ndarray, *,
+                        block_m: int = 128, block_n: int = 128,
+                        block_k: int = 128,
+                        interpret: bool = True) -> jnp.ndarray:
+    """raster (M, K) int8, w (K, N) int8 -> (M, N) int32. Dims must be padded
+    to block multiples by the ops wrapper."""
+    M, K = raster.shape
+    K2, N = w.shape
+    assert K == K2 and M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    grid = (M // block_m, N // block_n, K // block_k)
+    kernel = functools.partial(_smm_kernel, k_blocks=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+            pl.BlockSpec((block_k, block_n), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(raster, w)

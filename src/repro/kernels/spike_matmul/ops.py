@@ -1,0 +1,24 @@
+"""Jitted public wrapper: pads to MXU tiles, flattens (B, T) -> M rows."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad_dim, use_interpret
+from repro.kernels.spike_matmul.kernel import spike_matmul_kernel
+
+
+@jax.jit
+def spike_matmul(raster_btn: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """raster (B, T, N_in) int8, w (N_in, N_pad) int8 -> (B, T, N_pad) int32."""
+    B, T, K = raster_btn.shape
+    N = w.shape[1]
+    x = raster_btn.reshape(B * T, K)
+    x = pad_dim(x, 0, 128)
+    x = pad_dim(x, 1, 128)
+    wp = pad_dim(pad_dim(w, 0, 128), 1, 128)
+    out = spike_matmul_kernel(x, wp, interpret=use_interpret())
+    return out[:B * T, :N].reshape(B, T, N)

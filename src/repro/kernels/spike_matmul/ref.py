@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the time-batched spike matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spike_matmul_ref(raster: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """raster (..., K) int8, w (K, N) int8 -> (..., N) int32."""
+    return jax.lax.dot_general(
+        raster, w, (((raster.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)

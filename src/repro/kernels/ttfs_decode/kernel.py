@@ -1,0 +1,62 @@
+"""Grouped TTFS decode kernel — the RTL comparator tree, lane-parallel.
+
+The FPGA decodes the label with a comparator tree over class-group first-spike
+registers. The TPU version evaluates the same deterministic rule in one
+kernel invocation per batch row: pack (time, neuron_index) into a single
+monotone int32 key so that one min-reduction implements both the earliest-
+time rule AND the lowest-index tie-break exactly:
+
+    key(n) = first_spike[n] * NPAD + n        (fits int32 for T*NPAD < 2^31)
+
+Group min over keys, then arg-min over groups (first-index tie-break), with
+the artifact's membrane fallback when nothing fired. Bit-identical to
+core.ttfs.decode_labels by construction; tests assert it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(first_ref, v_ref, out_ref, *, n_groups: int, per_group: int,
+                   sentinel: int, fallback: str):
+    n = n_groups * per_group
+    first = first_ref[0, :].astype(jnp.int32)
+    v = v_ref[0, :].astype(jnp.int32)
+    key = first * n + jax.lax.iota(jnp.int32, n)
+    gkey = jnp.min(key.reshape(n_groups, per_group), axis=1)       # (G,)
+    ttfs_label = jnp.argmin(gkey).astype(jnp.int32)
+    any_spike = jnp.min(first) < sentinel
+    if fallback == "membrane":
+        gv = jnp.max(v.reshape(n_groups, per_group), axis=1)
+        fb_label = jnp.argmax(gv).astype(jnp.int32)
+    else:
+        fb_label = jnp.int32(0)
+    out_ref[0] = jnp.where(any_spike, ttfs_label, fb_label)
+
+
+def ttfs_decode_kernel(first_spike: jnp.ndarray, v_final: jnp.ndarray, *,
+                       n_groups: int, per_group: int, sentinel: int,
+                       fallback: str = "membrane",
+                       interpret: bool = True) -> jnp.ndarray:
+    """first_spike/v_final (B, G*P) int32 -> labels (B,) int32."""
+    B, N = first_spike.shape
+    assert N == n_groups * per_group
+    kernel = functools.partial(_decode_kernel, n_groups=n_groups,
+                               per_group=per_group, sentinel=sentinel,
+                               fallback=fallback)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, N), lambda b: (b, 0)),
+            pl.BlockSpec((1, N), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b: (b,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(first_spike, v_final)

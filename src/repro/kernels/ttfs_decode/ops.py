@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the grouped TTFS decode kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.ttfs_decode.kernel import ttfs_decode_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("n_groups", "per_group",
+                                             "sentinel", "fallback"))
+def ttfs_decode(first_spike: jnp.ndarray, v_final: jnp.ndarray, *,
+                n_groups: int, per_group: int, sentinel: int,
+                fallback: str = "membrane") -> jnp.ndarray:
+    return ttfs_decode_kernel(first_spike, v_final, n_groups=n_groups,
+                              per_group=per_group, sentinel=sentinel,
+                              fallback=fallback, interpret=use_interpret())

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: defers to the single source of truth in core.ttfs."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.ttfs import decode_labels
+
+
+def ttfs_decode_ref(first_spike: jnp.ndarray, v_final: jnp.ndarray, *,
+                    n_groups: int, per_group: int, sentinel: int,
+                    fallback: str = "membrane") -> jnp.ndarray:
+    return decode_labels(first_spike, v_final, n_groups=n_groups,
+                         per_group=per_group, sentinel=sentinel,
+                         fallback=fallback)

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (required so smoke tests see 1 device while the dry-run
+sees its 512 placeholder devices).
+
+    single-pod:  (16, 16)      axes ("data", "model")       = 256 chips
+    multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+The "pod" axis is pure data parallelism across pods (gradient all-reduce
+over DCI); "data" is in-pod data parallel / FSDP; "model" is tensor/expert
+parallel over ICI.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    from jax.sharding import AxisType
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests (requires >= prod(shape) host devices)."""
+    return _mk(shape, axes)

@@ -1,0 +1,55 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) cell —
+weak-type-correct, shardable, zero allocation. The dry-run lowers against
+these; smoke tests materialize small concrete versions of the same structure.
+
+Frontend stubs per assignment: [audio] gets precomputed frame embeddings
+(B, S, d); [vlm] gets precomputed patch embeddings (B, n_patches, d).
+Whisper stream mapping (DESIGN.md §4): the seq_len of a cell applies to the
+encoder frame stream; the decoder text stream is dec_max_len (448) for
+train/prefill and the seq_len-long self-attention cache for decode cells.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES
+from repro.models.config import ArchConfig
+from repro.models.model import LM
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    cell = SHAPES[shape_name]
+    B, S = cell.global_batch, cell.seq_len
+    if cfg.family == "audio":
+        return {"tokens": sds((B, cfg.dec_max_len), I32),
+                "labels": sds((B, cfg.dec_max_len), I32),
+                "enc_frames": sds((B, S, cfg.d_model), BF16)}
+    out = {"tokens": sds((B, S), I32), "labels": sds((B, S), I32)}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = sds((B, cfg.n_patches, cfg.d_model), BF16)
+    return out
+
+
+def prefill_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    b = train_batch_specs(cfg, shape_name)
+    b.pop("labels")
+    return b
+
+
+def decode_specs(cfg: ArchConfig, shape_name: str, lm: LM) -> dict:
+    """Abstract (cache, tokens) for serve_step: one new token against a
+    KV/SSM cache of seq_len."""
+    cell = SHAPES[shape_name]
+    B, S = cell.global_batch, cell.seq_len
+    enc_len = cfg.cross_len if cfg.enc_layers else None
+    cache = lm.init_cache(B, S, dtype=BF16, abstract=True, enc_len=enc_len)
+    return {"cache": cache, "tokens": sds((B, 1), I32)}

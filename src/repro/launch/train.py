@@ -1,0 +1,82 @@
+"""Production training launcher: --arch <id> on the production mesh.
+
+On a real TPU slice this is the entry point per host process (jax.distributed
+handles cross-host init); on this CPU container it runs reduced configs for
+validation and abstract-lowers full configs (use launch/dryrun.py for the
+512-device compile).
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+        --steps 30 --ckpt /tmp/ck --compress-grads
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, reduced as make_reduced
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.models.model import LM
+from repro.training import lm_step, optim as O
+from repro.training.checkpoint import CheckpointManager
+from repro.training.elastic import StragglerMonitor
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+    lm = LM(cfg)
+    params = lm.init_params(jax.random.PRNGKey(0), jnp.float32)
+    optimizer = O.get(cfg.optimizer, args.lr)
+    opt_state = lm_step.make_opt_state(params, optimizer, args.compress_grads)
+    step_fn = jax.jit(lm_step.make_train_step(
+        lm, optimizer, grad_accum=args.grad_accum,
+        compress_grads=args.compress_grads))
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+    mgr = CheckpointManager(args.ckpt, keep=2) if args.ckpt else None
+    mon = StragglerMonitor()
+
+    start = 0
+    if mgr and mgr.latest_step() is not None:
+        start, restored = mgr.restore({"params": params, "opt": opt_state})
+        params, opt_state = restored["params"], restored["opt"]
+        print(f"[resume] restored step {start}")
+
+    for i in range(start, args.steps):
+        t0 = time.perf_counter()
+        batch = jax.tree.map(jnp.asarray, pipe.global_batch_at(i))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        mon.record("host0", time.perf_counter() - t0)
+        if (i + 1) % 5 == 0 or i == start:
+            print(f"step {i + 1:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"{time.perf_counter() - t0:.2f}s/step")
+        if mgr and (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, {"params": params, "opt": opt_state},
+                     meta={"loss": float(metrics["loss"]), "arch": cfg.name})
+    if mon.stragglers():
+        print(f"[straggler report] {mon.stragglers()}")
+    print("training complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Shared neural layers: norms, RoPE, chunked (flash-style) attention, MLPs.
+
+Everything is pure-jnp and shape-static; the Pallas flash_attention kernel is
+a drop-in for the chunked attention on real TPUs (kernels/flash_attention),
+while this implementation is the XLA-compilable path used by the multi-pod
+dry-run.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale + bias
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (B, S, H, D), positions (B, S) or (S,) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B, S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------- chunked flash attention
+class _SoftmaxState(NamedTuple):
+    m: jnp.ndarray    # (B, H, bq, 1) running max
+    l: jnp.ndarray    # (B, H, bq, 1) running sum
+    acc: jnp.ndarray  # (B, H, bq, D) accumulator
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int | None = None,
+                      q_offset: int = 0, bq: int = 512, bk: int = 512,
+                      kv_len: int | None = None,
+                      gqa: str = "grouped") -> jnp.ndarray:
+    """Memory-bounded online-softmax attention.
+
+    q (B, Hq, Sq, D); k, v (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+
+    gqa="grouped": q reshaped (B, Hkv, group, Sq, D) — K/V never expanded.
+    gqa="repeat" (§Perf variant): heads stay FLAT and each K/V *block* is
+    repeated to Hq inside the kv loop. Under tensor parallelism the grouped
+    reshape is the expensive one: Hkv (4–8) does not divide a 16-way model
+    axis, so GSPMD regathers q/k/v at (B,S,H*D) size EVERY LAYER (measured
+    ~12 x 1 GB per layer on yi-6b train). Flat Hq (32/64…) shards cleanly;
+    the per-block repeat is device-local and costs O(bk*D) memory.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if gqa == "repeat":
+        group = 1
+    kv_len = Skv if kv_len is None else kv_len
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    # self-pad to block multiples; kv padding is masked via kv_len, q padding
+    # is sliced off the output.
+    sq_pad = (-Sq) % bq
+    skv_pad = (-Skv) % bk
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_pad), (0, 0)))
+    if skv_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+    Sq_p, Skv_p = Sq + sq_pad, Skv + skv_pad
+    scale = 1.0 / (D ** 0.5)
+    rep = Hq // Hkv if gqa == "repeat" else 1
+    heads = Hq if gqa == "repeat" else Hkv
+    qg = q.reshape(B, heads, group, Sq_p, D)
+
+    nq, nk = Sq_p // bq, Skv_p // bk
+
+    def q_block(qi):
+        qb = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=3)
+        qb = qb.astype(jnp.float32) * scale
+        qpos = q_offset + qi * bq + jnp.arange(bq, dtype=jnp.int32)
+
+        def kv_step(state: _SoftmaxState, ki):
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * bk, bk, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * bk, bk, axis=2)
+            if rep > 1:   # local per-block KV expansion (gqa="repeat")
+                kb = jnp.repeat(kb, rep, axis=1)
+                vb = jnp.repeat(vb, rep, axis=1)
+            kpos = ki * bk + jnp.arange(bk, dtype=jnp.int32)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb.astype(jnp.float32))
+            mask = kpos[None, :] < kv_len
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(state.m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(state.m - m_new)
+            l_new = state.l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = state.acc * alpha + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
+            return _SoftmaxState(m_new, l_new, acc_new), None
+
+        init = _SoftmaxState(
+            m=jnp.full((B, heads, group, bq, 1), NEG_INF, jnp.float32),
+            l=jnp.zeros((B, heads, group, bq, 1), jnp.float32),
+            acc=jnp.zeros((B, heads, group, bq, D), jnp.float32))
+        state, _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        out = state.acc / jnp.where(state.l == 0.0, 1.0, state.l)
+        return out.astype(q.dtype)
+
+    if nq == 1:
+        out = q_block(0)
+    else:
+        outs = jax.lax.map(q_block, jnp.arange(nq))        # (nq, B, h, g, bq, D)
+        out = jnp.moveaxis(outs, 0, 3).reshape(B, heads, group, Sq_p, D)
+    out = out.reshape(B, Hq, Sq_p, D)
+    return out[:, :, :Sq, :]
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     *, cache_len: jnp.ndarray, window: int | None = None,
+                     window_rotated: bool = False,
+                     gqa: str = "grouped") -> jnp.ndarray:
+    """Single-step decode attention against a (B, Hkv, S_max, D) cache.
+
+    cache_len: (B,) or scalar int32 — number of valid cache entries. With
+    ``window_rotated`` the cache is a ring buffer of size window (SWA decode):
+    every slot is valid once full, and positions need no causal mask.
+    """
+    B, Hq, one, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    if gqa == "repeat":   # flat heads shard cleanly under TP (see chunked)
+        k_cache = jnp.repeat(k_cache, Hq // Hkv, axis=1)
+        v_cache = jnp.repeat(v_cache, Hq // Hkv, axis=1)
+        Hkv = Hq
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, D).astype(jnp.float32) / (D ** 0.5)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache.astype(jnp.float32))
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    valid = kpos[None, :] < jnp.reshape(cache_len, (-1, 1))    # (B, S)
+    if window is not None and not window_rotated:
+        valid &= kpos[None, :] > jnp.reshape(cache_len, (-1, 1)) - 1 - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, 1, D).astype(q.dtype)
+
+
+# ------------------------------------------------------------------- MLPs
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    return jax.nn.gelu(x @ w_in + b_in, approximate=True) @ w_out + b_out

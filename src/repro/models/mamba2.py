@@ -1,0 +1,219 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked, plus O(1) decode.
+
+Faithful to the SSD algorithm (Dao & Gu, arXiv:2405.21060): the sequence is
+split into chunks of length Q; within a chunk the output is a masked
+quadratic form (the "attention-like" dual), across chunks a linear recurrence
+carries the (H, N, P) state. Both terms are einsums — MXU-shaped — and the
+inter-chunk scan is O(S/Q), which is what makes long_500k tractable.
+
+Shapes: x (B,S,H,P) head inputs, a (B,S,H) log-decay (= A*dt, negative),
+B_/C_ (B,S,G,N) input/output projections (G groups broadcast over H).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Constrain = Callable[[jnp.ndarray, tuple], jnp.ndarray]
+_noop: Constrain = lambda x, axes: x
+
+
+class SSMState(NamedTuple):
+    state: jnp.ndarray      # (B, H, N, P)
+    conv: jnp.ndarray       # (B, K-1, conv_ch) rolling conv window
+
+
+def _expand_groups(t: jnp.ndarray, H: int) -> jnp.ndarray:
+    """(B, S, G, N) -> (B, S, H, N) by repeating each group H/G times."""
+    G = t.shape[2]
+    if G == H:
+        return t
+    return jnp.repeat(t, H // G, axis=2)
+
+
+def ssd_chunked(x: jnp.ndarray, a: jnp.ndarray, B_: jnp.ndarray, C_: jnp.ndarray,
+                chunk: int, constrain: Constrain = _noop,
+                init_state: jnp.ndarray | None = None
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P) float32, final_state (B,H,N,P) float32).
+
+    x is assumed already scaled by dt (i.e. the B dt x term's dt)."""
+    B, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    # self-pad S to a chunk multiple: a=0, x=0 padding is a no-op on the state
+    # (decay exp(0)=1, zero input) and the padded outputs are sliced off.
+    s_pad = (-S) % Q
+    if s_pad:
+        x = jnp.pad(x, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, s_pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    S_p = S + s_pad
+    nc = S_p // Q
+
+    Bh = _expand_groups(B_, H).astype(jnp.float32)
+    Ch = _expand_groups(C_, H).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    # chunk views
+    xc = xf.reshape(B, nc, Q, H, P)
+    ac = af.reshape(B, nc, Q, H)
+    Bc = Bh.reshape(B, nc, Q, H, N)
+    Cc = Ch.reshape(B, nc, Q, H, N)
+    xc = constrain(xc, ("data", None, None, "model", None))
+    Bc = constrain(Bc, ("data", None, None, "model", None))
+    Cc = constrain(Cc, ("data", None, None, "model", None))
+
+    cum = jnp.cumsum(ac, axis=2)                                 # (B,nc,Q,H)
+
+    # ---- intra-chunk (diagonal) term: masked quadratic form --------------
+    # L[q, t] = exp(cum[q] - cum[t]) for q >= t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,Q,Q,H)
+    qi = jnp.arange(Q)
+    causal = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: future positions have seg > 0 and would overflow; the
+    # where-after-exp form is forward-safe but produces inf*0 = NaN in the VJP.
+    L = jnp.exp(jnp.where(causal, seg, -1e30))
+    scores = jnp.einsum("bcqhn,bcthn->bcqth", Cc, Bc)            # (B,nc,Q,Q,H)
+    y_diag = jnp.einsum("bcqth,bcqth,bcthp->bcqhp", scores, L, xc)
+
+    # ---- chunk states ----------------------------------------------------
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)              # (B,nc,Q,H)
+    states = jnp.einsum("bcthn,bcth,bcthp->bchnp", Bc, decay_to_end, xc)
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    def step(s_prev, inp):
+        st, dec = inp                                            # (B,H,N,P), (B,H)
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    s0 = (jnp.zeros((B, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                # (B,nc,H,N,P)
+
+    # ---- inter-chunk output term ------------------------------------------
+    state_decay = jnp.exp(cum)                                   # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp", Cc, state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(B, S_p, H, P)[:, :S]
+    return y, final_state
+
+
+def mamba2_mixer(x: jnp.ndarray, p: dict, cfg, constrain: Constrain = _noop,
+                 state: SSMState | None = None, return_state: bool = False):
+    """Full Mamba-2 block on (B, S, d_model). p holds: in_proj, conv_w (K, ch),
+    conv_b, A_log (H,), D (H,), dt_bias (H,), norm (d_inner,), out_proj."""
+    B, S, d = x.shape
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_d_state, cfg.ssm_n_groups
+    d_in = cfg.d_inner
+    K = cfg.ssm_conv
+    conv_ch = d_in + 2 * G * N
+
+    zxbcdt = x @ p["in_proj"]                    # (B,S, 2*d_in + 2GN + H)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + conv_ch], axis=-1)
+
+    # causal depthwise conv over xBC (window K), silu
+    if state is None:
+        pad = jnp.zeros((B, K - 1, conv_ch), xBC.dtype)
+    else:
+        pad = state.conv.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)     # (B, S+K-1, ch)
+    conv = sum(xp[:, j:j + S] * p["conv_w"][j][None, None, :] for j in range(K))
+    xBC = jax.nn.silu(conv + p["conv_b"])
+    new_conv = xp[:, S:, :]                      # last K-1 raw inputs
+
+    x_in, B_, C_ = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    x_in = x_in.reshape(B, S, H, P)
+    B_ = B_.reshape(B, S, G, N)
+    C_ = C_.reshape(B, S, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,)
+    a = A[None, None, :] * dt                                    # (B,S,H) log decay
+    x_dt = x_in.astype(jnp.float32) * dt[..., None]
+
+    y, fstate = ssd_chunked(x_dt, a, B_, C_, cfg.ssm_chunk, constrain,
+                            None if state is None else state.state)
+    y = y + p["D"][None, None, :, None] * x_in.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+
+    # gated RMSNorm (mamba2)
+    g = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype)
+    out = (g * p["norm"]) @ p["out_proj"]
+    if return_state:
+        return out, SSMState(state=fstate, conv=new_conv)
+    return out
+
+
+def mamba2_decode_step(x_t: jnp.ndarray, p: dict, cfg,
+                       state: SSMState) -> tuple[jnp.ndarray, SSMState]:
+    """Single-token decode: x_t (B, 1, d) -> (y (B, 1, d), new state). O(1) in
+    context length — the reason SSM archs run the long_500k cell."""
+    B = x_t.shape[0]
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_d_state, cfg.ssm_n_groups
+    d_in = cfg.d_inner
+    K = cfg.ssm_conv
+    conv_ch = d_in + 2 * G * N
+
+    zxbcdt = x_t[:, 0] @ p["in_proj"]            # (B, ...)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + conv_ch], axis=-1)
+
+    win = jnp.concatenate([state.conv.astype(xBC.dtype), xBC[:, None, :]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", win, p["conv_w"])
+    xBC = jax.nn.silu(conv + p["conv_b"])
+    new_conv = win[:, 1:, :]
+
+    x_in, B_, C_ = jnp.split(xBC, [d_in, d_in + G * N], axis=-1)
+    x_in = x_in.reshape(B, H, P)
+    B_ = _expand_groups(B_.reshape(B, 1, G, N), H)[:, 0]          # (B,H,N)
+    C_ = _expand_groups(C_.reshape(B, 1, G, N), H)[:, 0]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(A[None] * dt)                                 # (B,H)
+    x_dt = x_in.astype(jnp.float32) * dt[..., None]               # (B,H,P)
+
+    s = state.state * decay[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", B_.astype(jnp.float32), x_dt)
+    y = jnp.einsum("bhn,bhnp->bhp", C_.astype(jnp.float32), s)
+    y = y + p["D"][None, :, None] * x_in.astype(jnp.float32)
+    y = y.reshape(B, d_in).astype(x_t.dtype)
+
+    g = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x_t.dtype)
+    out = ((g * p["norm"]) @ p["out_proj"])[:, None, :]
+    return out, SSMState(state=s, conv=new_conv)
+
+
+def ssd_naive_ref(x: jnp.ndarray, a: jnp.ndarray, B_: jnp.ndarray,
+                  C_: jnp.ndarray) -> jnp.ndarray:
+    """O(S^2-free) sequential-recurrence oracle for tests: step the SSM one
+    token at a time. x (B,S,H,P) pre-scaled by dt, a (B,S,H) log decay."""
+    B, S, H, P = x.shape
+    N = B_.shape[-1]
+    Bh = _expand_groups(B_, H).astype(jnp.float32)
+    Ch = _expand_groups(C_, H).astype(jnp.float32)
+
+    def step(s, t):
+        dec = jnp.exp(a[:, t].astype(jnp.float32))                # (B,H)
+        s = s * dec[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", Bh[:, t], x[:, t].astype(jnp.float32))
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, t], s)
+        return s, y
+
+    s0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1)                                 # (B,S,H,P)

@@ -1,0 +1,477 @@
+"""Unified LM: one forward/prefill/decode covering the whole assigned pool.
+
+Layer stacking: parameters are stacked over ``n_periods`` and the layer loop
+is a single ``lax.scan`` over one *period* of sublayers (dense archs: period
+= ("attn",); Jamba: 8 sublayers, 1 attn + 7 mamba; Whisper decoder: one
+self+cross sublayer). This keeps the lowered HLO compact (66 dry-run cells
+compile on one CPU core) and is also the right thing on real hardware
+(compile once per period, not per layer).
+
+The ``constrain`` callback injects GSPMD sharding constraints; models never
+import mesh code (the distributed layer binds it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import mamba2, moe
+from repro.models.config import ArchConfig
+
+Constrain = Callable[[jnp.ndarray, tuple], jnp.ndarray]
+_noop: Constrain = lambda x, axes: x
+
+
+def _init_dense(key, shape, dtype, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig, constrain: Constrain = _noop):
+        self.cfg = cfg
+        self.constrain = constrain
+        # mid-layer activation constraints are a §Perf knob (see ArchConfig)
+        self.constrain_mid = constrain if cfg.activation_constraints else _noop
+
+    # ================================================================ params
+    def _attn_params(self, key, dt, cross: bool = False) -> dict:
+        c = self.cfg
+        d, hq, hkv, dh = c.d_model, c.n_heads, c.n_kv_heads, c.d_head
+        ks = jax.random.split(key, 12)
+        p = {
+            "ln": jnp.ones((d,), dt),
+            "wq": _init_dense(ks[0], (d, hq * dh), dt),
+            "wk": _init_dense(ks[1], (d, hkv * dh), dt),
+            "wv": _init_dense(ks[2], (d, hkv * dh), dt),
+            "wo": _init_dense(ks[3], (hq * dh, d), dt),
+        }
+        if c.norm == "layernorm":
+            p["ln_b"] = jnp.zeros((d,), dt)
+        if c.qkv_bias:
+            p["bq"] = jnp.zeros((hq * dh,), dt)
+            p["bk"] = jnp.zeros((hkv * dh,), dt)
+            p["bv"] = jnp.zeros((hkv * dh,), dt)
+        if c.qk_norm:
+            p["q_norm"] = jnp.ones((dh,), dt)
+            p["k_norm"] = jnp.ones((dh,), dt)
+        if cross:
+            p["x_ln"] = jnp.ones((d,), dt)
+            if c.norm == "layernorm":
+                p["x_ln_b"] = jnp.zeros((d,), dt)
+            p["x_wq"] = _init_dense(ks[4], (d, hq * dh), dt)
+            p["x_wk"] = _init_dense(ks[5], (d, hkv * dh), dt)
+            p["x_wv"] = _init_dense(ks[6], (d, hkv * dh), dt)
+            p["x_wo"] = _init_dense(ks[7], (hq * dh, d), dt)
+        return p
+
+    def _ffn_params(self, key, dt, idx_in_period: int) -> dict:
+        c = self.cfg
+        d = c.d_model
+        ks = jax.random.split(key, 4)
+        if c.is_moe_layer(idx_in_period):
+            f = c.d_ff_expert
+            return {
+                "ln2": jnp.ones((d,), dt),
+                "router": _init_dense(ks[0], (d, c.n_experts), jnp.float32),
+                "w_gate": _init_dense(ks[1], (c.n_experts, d, f), dt),
+                "w_up": _init_dense(ks[2], (c.n_experts, d, f), dt),
+                "w_down": _init_dense(ks[3], (c.n_experts, f, d), dt),
+            }
+        if c.d_ff == 0:
+            return {}
+        if c.act == "gelu":
+            p = {"ln2": jnp.ones((d,), dt),
+                 "w_in": _init_dense(ks[0], (d, c.d_ff), dt),
+                 "b_in": jnp.zeros((c.d_ff,), dt),
+                 "w_out": _init_dense(ks[1], (c.d_ff, d), dt),
+                 "b_out": jnp.zeros((d,), dt)}
+            if c.norm == "layernorm":
+                p["ln2_b"] = jnp.zeros((d,), dt)
+            return p
+        return {"ln2": jnp.ones((d,), dt),
+                "w_gate": _init_dense(ks[0], (d, c.d_ff), dt),
+                "w_up": _init_dense(ks[1], (d, c.d_ff), dt),
+                "w_down": _init_dense(ks[2], (c.d_ff, d), dt)}
+
+    def _mamba_params(self, key, dt) -> dict:
+        c = self.cfg
+        d, d_in = c.d_model, c.d_inner
+        H, N, G, K = c.ssm_heads, c.ssm_d_state, c.ssm_n_groups, c.ssm_conv
+        conv_ch = d_in + 2 * G * N
+        ks = jax.random.split(key, 4)
+        return {
+            "ln": jnp.ones((d,), dt),
+            "in_proj": _init_dense(ks[0], (d, 2 * d_in + 2 * G * N + H), dt),
+            "conv_w": _init_dense(ks[1], (K, conv_ch), dt, scale=0.1),
+            "conv_b": jnp.zeros((conv_ch,), dt),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+            "D": jnp.ones((H,), jnp.float32),
+            "dt_bias": jnp.zeros((H,), jnp.float32),
+            "norm": jnp.ones((d_in,), dt),
+            "out_proj": _init_dense(ks[2], (d_in, d), dt),
+        }
+
+    def _period_params(self, key, dt, cross: bool = False) -> dict:
+        c = self.cfg
+        out = {}
+        keys = jax.random.split(key, 2 * len(c.period))
+        for i, kind in enumerate(c.period):
+            if kind == "attn":
+                sub = self._attn_params(keys[2 * i], dt, cross=cross)
+            elif kind == "mamba":
+                sub = self._mamba_params(keys[2 * i], dt)
+            else:
+                raise ValueError(kind)
+            sub.update(self._ffn_params(keys[2 * i + 1], dt, i))
+            out[f"{i}:{kind}"] = sub
+        return out
+
+    def init_params(self, key: jax.Array, dtype=jnp.bfloat16) -> dict:
+        c = self.cfg
+        ks = jax.random.split(key, 8)
+        stacked = jax.vmap(lambda k: self._period_params(
+            k, dtype, cross=bool(c.enc_layers)))(
+            jax.random.split(ks[0], c.n_periods))
+        params = {
+            "embed": _init_dense(ks[1], (c.vocab, c.d_model), dtype),
+            "blocks": stacked,
+            "final_norm": jnp.ones((c.d_model,), dtype),
+        }
+        if c.norm == "layernorm":
+            params["final_norm_b"] = jnp.zeros((c.d_model,), dtype)
+        if not c.tie_embeddings:
+            params["lm_head"] = _init_dense(ks[2], (c.d_model, c.vocab), dtype)
+        if c.enc_layers:
+            enc_cfg = dataclasses.replace(c, n_kv_heads=c.n_heads)
+            enc = LM(enc_cfg, self.constrain)
+            params["enc_blocks"] = jax.vmap(
+                lambda k: enc._period_params(k, dtype))(
+                jax.random.split(ks[3], c.enc_layers))
+            params["enc_final_norm"] = jnp.ones((c.d_model,), dtype)
+            params["enc_final_norm_b"] = jnp.zeros((c.d_model,), dtype)
+        return params
+
+    def param_specs(self, dtype=jnp.bfloat16):
+        """ShapeDtypeStruct pytree (no allocation) — dry-run input."""
+        return jax.eval_shape(
+            lambda k: self.init_params(k, dtype), jax.random.PRNGKey(0))
+
+    # =============================================================== helpers
+    _WG_IN = ("wq", "wk", "wv", "x_wq", "x_wk", "x_wv", "w_in", "in_proj")
+    _WG_OUT = ("wo", "x_wo", "w_down", "w_out", "out_proj")
+
+    def _gather_weights(self, sub: dict) -> dict:
+        """ZeRO-3 weight-gather (cfg.fsdp_weight_gather): constrain this
+        layer's weights to TP-only specs at use time. Under data-sharded
+        in_shardings, XLA materializes a per-layer weight all-gather —
+        O(params/L) wire per step — instead of per-layer ACTIVATION reshards
+        — O(B*S*d) wire — which baselines show dominating."""
+        if not self.cfg.fsdp_weight_gather:
+            return sub
+        out = {}
+        for k, v in sub.items():
+            if k in self._WG_IN and v.ndim == 2:
+                out[k] = self.constrain(v, (None, ("model", None)))
+            elif k in self._WG_OUT and v.ndim == 2:
+                out[k] = self.constrain(v, (("model", None), None))
+            elif k in ("w_gate", "w_up"):
+                if v.ndim == 3:     # experts (E, d, f): E first, f fallback
+                    out[k] = self.constrain(
+                        v, (("model", None), None, ("model", None)))
+                else:
+                    out[k] = self.constrain(v, (None, ("model", None)))
+            elif k == "w_down" and v.ndim == 3:
+                out[k] = self.constrain(
+                    v, (("model", None), ("model", None), None))
+            else:
+                out[k] = v
+        return out
+
+    def _norm(self, x, p, name="ln"):
+        if self.cfg.norm == "layernorm":
+            return L.layernorm(x, p[name], p[f"{name}_b"], self.cfg.norm_eps)
+        return L.rmsnorm(x, p[name], self.cfg.norm_eps)
+
+    def _qkv(self, h, p, prefix=""):
+        c = self.cfg
+        q = h @ p[prefix + "wq"]
+        k = h @ p[prefix + "wk"]
+        v = h @ p[prefix + "wv"]
+        if c.qkv_bias and not prefix:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        B, S = h.shape[:2]
+        q = q.reshape(B, S, c.n_heads, c.d_head)
+        k = k.reshape(B, S, c.n_kv_heads, c.d_head)
+        v = v.reshape(B, S, c.n_kv_heads, c.d_head)
+        if c.qk_norm and not prefix:
+            q = L.rmsnorm(q, p["q_norm"], c.norm_eps)
+            k = L.rmsnorm(k, p["k_norm"], c.norm_eps)
+        return q, k, v
+
+    def _attn_full(self, x, p, positions, causal=True):
+        """Training/prefill attention over the whole sequence."""
+        c = self.cfg
+        h = self._norm(x, p)
+        q, k, v = self._qkv(h, p)
+        if c.rope_theta > 0:
+            q = L.apply_rope(q, positions, c.rope_theta)
+            k = L.apply_rope(k, positions, c.rope_theta)
+        sp = ("data", None, "model", None)
+        q = self.constrain_mid(q, sp); k = self.constrain_mid(k, sp)
+        out = L.chunked_attention(
+            jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+            causal=causal, window=c.attn_window, gqa=c.attn_gqa_mode)
+        out = jnp.moveaxis(out, 1, 2).reshape(x.shape[0], x.shape[1], -1)
+        return x + out @ p["wo"]
+
+    def _cross_attn(self, x, p, enc_out=None, cache=None):
+        c = self.cfg
+        h = self._norm(x, p, "x_ln")
+        B, S = h.shape[:2]
+        q = (h @ p["x_wq"]).reshape(B, S, c.n_heads, c.d_head)
+        if cache is not None:
+            k, v = cache["xk"], cache["xv"]             # (B, Hkv, Senc, D)
+        else:
+            k = (enc_out @ p["x_wk"]).reshape(B, -1, c.n_kv_heads, c.d_head)
+            v = (enc_out @ p["x_wv"]).reshape(B, -1, c.n_kv_heads, c.d_head)
+            k, v = jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)
+        out = L.chunked_attention(jnp.moveaxis(q, 1, 2), k, v, causal=False)
+        out = jnp.moveaxis(out, 1, 2).reshape(B, S, -1)
+        return x + out @ p["x_wo"]
+
+    def _ffn(self, x, p, idx_in_period):
+        c = self.cfg
+        if c.is_moe_layer(idx_in_period) and c.n_experts:
+            h = self._norm(x, p, "ln2")
+            mesh = getattr(self.constrain, "mesh", None)
+            if (c.moe_buf_mode == "shard_map" and mesh is not None
+                    and "model" in mesh.axis_names
+                    and c.n_experts % int(mesh.shape["model"]) == 0):
+                y, aux = moe.moe_ffn_shard_map(
+                    h, p, n_experts=c.n_experts, top_k=c.top_k,
+                    capacity_factor=c.capacity_factor, mesh=mesh)
+            else:
+                bm = "local" if c.moe_buf_mode == "shard_map" \
+                    else c.moe_buf_mode
+                y, aux = moe.moe_ffn(h, p, n_experts=c.n_experts,
+                                     top_k=c.top_k,
+                                     capacity_factor=c.capacity_factor,
+                                     constrain=self.constrain_mid,
+                                     buf_mode=bm)
+            return x + y, aux
+        if not p or "ln2" not in p:
+            return x, jnp.float32(0.0)
+        h = self._norm(x, p, "ln2")
+        if c.act == "gelu":
+            y = L.gelu_mlp(h, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+        else:
+            h = self.constrain_mid(h, ("data", None, None))
+            y = L.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        return x + y, jnp.float32(0.0)
+
+    # ================================================================ forward
+    def _embed(self, params, tokens, patch_embeds=None, frame_embeds=None):
+        c = self.cfg
+        if frame_embeds is not None:              # audio stub: already embedded
+            return frame_embeds
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if patch_embeds is not None:              # vlm stub: patch prefix
+            P = patch_embeds.shape[1]
+            x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, P:]], axis=1)
+        return x
+
+    def forward(self, params, tokens, *, patch_embeds=None, enc_frames=None):
+        """Training/prefill forward -> (logits (B,S,V), aux_loss)."""
+        c = self.cfg
+        x = self._embed(params, tokens, patch_embeds)
+        x = self.constrain(x, ("data", None, None))
+        B, S = x.shape[:2]
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+        enc_out = None
+        if c.enc_layers:
+            enc_out = self.encode(params, enc_frames)
+
+        def body(carry, per_params):
+            x, aux = carry
+            for i, kind in enumerate(c.period):
+                p = self._gather_weights(per_params[f"{i}:{kind}"])
+                if kind == "attn":
+                    x = self._attn_full(x, p, positions)
+                    if enc_out is not None:
+                        x = self._cross_attn(x, p, enc_out=enc_out)
+                else:
+                    h = self._norm(x, p)
+                    x = x + mamba2.mamba2_mixer(h, p, c, self.constrain_mid)
+                x, a = self._ffn(x, p, i)
+                aux = aux + a
+            return (x, aux), None
+
+        if not c.remat or c.remat_policy == "none":
+            body_fn = body
+        elif c.remat_policy == "dots":
+            # save matmul outputs, recompute only cheap elementwise ops:
+            # trades ~25% recompute FLOPs for activation memory (§Perf)
+            body_fn = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body_fn = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0.0)),
+                                   params["blocks"])
+        x = self._norm(x, {"ln": params["final_norm"],
+                           "ln_b": params.get("final_norm_b")})
+        head = params["embed"].T if c.tie_embeddings else params["lm_head"]
+        logits = x @ head
+        return self.constrain(logits, ("data", None, "model")), aux
+
+    def encode(self, params, frames):
+        """Whisper encoder: bidirectional attention over frame embeddings."""
+        c = self.cfg
+        B, S, _ = frames.shape
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+        x = frames + _sinusoid(S, c.d_model, frames.dtype)
+
+        def body(x, per_params):
+            p = per_params["0:attn"]
+            x = self._attn_full(x, p, pos, causal=False)
+            x, _ = self._ffn(x, p, 0)
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.layernorm(x, params["enc_final_norm"], params["enc_final_norm_b"])
+
+    def loss(self, params, batch) -> tuple[jnp.ndarray, dict]:
+        """batch: tokens (B,S), labels (B,S) (-100 = masked), optional
+        patch_embeds / enc_frames."""
+        logits, aux = self.forward(
+            params, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            enc_frames=batch.get("enc_frames"))
+        labels = batch["labels"]
+        mask = labels >= 0
+        safe = jnp.maximum(labels, 0)
+        # CE without materializing a full f32 log_softmax at 150k vocab:
+        # nll = logsumexp(logits) - logits[label]; XLA fuses the exp-reduce.
+        lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = lse - gold.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(mask), 1)
+        ce = jnp.sum(jnp.where(mask, nll, 0.0)) / denom
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux,
+                       "tokens": denom.astype(jnp.float32)}
+
+    # ================================================================= cache
+    def init_cache(self, B: int, s_max: int, dtype=jnp.bfloat16,
+                   abstract: bool = False, enc_len: int | None = None):
+        c = self.cfg
+        s_kv = min(s_max, c.attn_window) if c.attn_window else s_max
+        mk = (lambda sh, dt: jax.ShapeDtypeStruct(sh, dt)) if abstract \
+            else (lambda sh, dt: jnp.zeros(sh, dt))
+        blocks = {}
+        for i, kind in enumerate(c.period):
+            entry = {}
+            if kind == "attn":
+                entry["k"] = mk((c.n_periods, B, c.n_kv_heads, s_kv, c.d_head), dtype)
+                entry["v"] = mk((c.n_periods, B, c.n_kv_heads, s_kv, c.d_head), dtype)
+                if c.enc_layers:
+                    el = enc_len or c.cross_len
+                    entry["xk"] = mk((c.n_periods, B, c.n_kv_heads, el, c.d_head), dtype)
+                    entry["xv"] = mk((c.n_periods, B, c.n_kv_heads, el, c.d_head), dtype)
+            else:
+                conv_ch = c.d_inner + 2 * c.ssm_n_groups * c.ssm_d_state
+                entry["state"] = mk((c.n_periods, B, c.ssm_heads, c.ssm_d_state,
+                                     c.ssm_head_dim), jnp.float32)
+                entry["conv"] = mk((c.n_periods, B, c.ssm_conv - 1, conv_ch), dtype)
+            blocks[f"{i}:{kind}"] = entry
+        ln = jax.ShapeDtypeStruct((), jnp.int32) if abstract else jnp.zeros((), jnp.int32)
+        return {"blocks": blocks, "len": ln}
+
+    def decode_step(self, params, cache, tokens):
+        """tokens (B, 1) -> (logits (B, 1, V), new cache). One new token
+        against a filled KV/SSM cache — this is what decode_* cells lower."""
+        c = self.cfg
+        B = tokens.shape[0]
+        x = self._embed(params, tokens)
+        pos = cache["len"]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+
+        def body(x, xs):
+            per_params, per_cache = xs
+            new_cache = {}
+            for i, kind in enumerate(c.period):
+                p = self._gather_weights(per_params[f"{i}:{kind}"])
+                pc = per_cache[f"{i}:{kind}"]
+                nc = {}
+                if kind == "attn":
+                    h = self._norm(x, p)
+                    q, k, v = self._qkv(h, p)
+                    if c.rope_theta > 0:
+                        q = L.apply_rope(q, positions, c.rope_theta)
+                        k = L.apply_rope(k, positions, c.rope_theta)
+                    s_kv = pc["k"].shape[2]
+                    rotated = c.attn_window is not None and s_kv == c.attn_window
+                    slot = jnp.where(rotated, pos % s_kv, jnp.minimum(pos, s_kv - 1))
+                    kc = jax.lax.dynamic_update_slice(
+                        pc["k"], jnp.moveaxis(k, 1, 2),
+                        (0, 0, slot.astype(jnp.int32), 0))
+                    vc = jax.lax.dynamic_update_slice(
+                        pc["v"], jnp.moveaxis(v, 1, 2),
+                        (0, 0, slot.astype(jnp.int32), 0))
+                    cache_len = jnp.minimum(pos + 1, s_kv)
+                    out = L.decode_attention(
+                        jnp.moveaxis(q, 1, 2), kc, vc, cache_len=cache_len,
+                        window=c.attn_window, window_rotated=bool(rotated),
+                        gqa=c.attn_gqa_mode)
+                    x = x + jnp.moveaxis(out, 1, 2).reshape(B, 1, -1) @ p["wo"]
+                    nc["k"], nc["v"] = kc, vc
+                    if c.enc_layers:
+                        x = self._cross_attn(x, p, cache={"xk": pc["xk"],
+                                                          "xv": pc["xv"]})
+                        nc["xk"], nc["xv"] = pc["xk"], pc["xv"]
+                else:
+                    h = self._norm(x, p)
+                    st = mamba2.SSMState(state=pc["state"], conv=pc["conv"])
+                    y, st = mamba2.mamba2_decode_step(h, p, c, st)
+                    x = x + y
+                    nc["state"], nc["conv"] = st.state, st.conv
+                x, _ = self._ffn(x, p, i)
+                new_cache[f"{i}:{kind}"] = nc
+            return x, new_cache
+
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        x = self._norm(x, {"ln": params["final_norm"],
+                           "ln_b": params.get("final_norm_b")})
+        head = params["embed"].T if c.tie_embeddings else params["lm_head"]
+        logits = x @ head
+        return logits, {"blocks": new_blocks, "len": cache["len"] + 1}
+
+    def prefill(self, params, tokens, s_max: int, **kw):
+        """Run the full forward while building the decode cache (test-scale
+        path; production prefill shares forward's chunked attention)."""
+        c = self.cfg
+        cache = self.init_cache(tokens.shape[0], s_max,
+                                dtype=params["embed"].dtype, **kw)
+        logits = None
+        for t in range(tokens.shape[1]):
+            logits, cache = self.decode_step(params, cache, tokens[:, t:t + 1])
+        return logits, cache
+
+
+@functools.lru_cache(maxsize=8)
+def _sinusoid_np(S: int, d: int):
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)[None]
+
+
+def _sinusoid(S: int, d: int, dtype):
+    return jnp.asarray(_sinusoid_np(S, d), dtype)

@@ -1,0 +1,134 @@
+"""Fault-tolerant checkpoint manager.
+
+Properties (tested in tests/training/test_checkpoint.py):
+  * atomic: writes to ``step_XXXX.tmp`` then ``os.replace`` — a crash mid-save
+    never corrupts the latest checkpoint;
+  * integrity-verified: per-array SHA-256 manifest, verified on restore
+    (the same discipline the deployment artifact uses);
+  * resumable: restore() is bit-exact — tests assert identical training
+    trajectories after a kill/restore;
+  * elastic: arrays are stored unsharded (host numpy); ``restore`` takes an
+    optional ``sharding_fn(path, array) -> Sharding`` so the same checkpoint
+    re-shards onto a different mesh (scale up/down between runs);
+  * bounded: keeps the newest ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _flatten(pytree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(pytree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _unflatten_into(target, arrays: dict[str, np.ndarray],
+                    sharding_fn: Callable | None = None):
+    flat, tdef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        a = arrays[key]
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {a.shape} != target {leaf.shape}")
+        a = a.astype(leaf.dtype)
+        if sharding_fn is not None:
+            a = jax.device_put(a, sharding_fn(key, a))
+        leaves.append(a)
+    return jax.tree_util.tree_unflatten(tdef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, pytree: Any, meta: dict | None = None) -> str:
+        arrays = _flatten(pytree)
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {}
+        for key, a in arrays.items():
+            fn = hashlib.sha256(key.encode()).hexdigest()[:24] + ".npy"
+            np.save(os.path.join(tmp, fn), a)
+            manifest[key] = {
+                "file": fn, "dtype": str(a.dtype), "shape": list(a.shape),
+                "sha256": hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest(),
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "meta": meta or {}, "arrays": manifest},
+                      f, sort_keys=True)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)          # atomic publish
+        self._prune()
+        return final
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target: Any, step: int | None = None,
+                sharding_fn: Callable | None = None,
+                verify: bool = True) -> tuple[int, Any]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        arrays = {}
+        for key, info in manifest["arrays"].items():
+            a = np.load(os.path.join(d, info["file"]))
+            if verify:
+                dig = hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+                if dig != info["sha256"]:
+                    raise IOError(f"checkpoint array {key!r} is corrupt")
+            arrays[key] = a
+        return manifest["step"], _unflatten_into(target, arrays, sharding_fn)
+
+    def meta(self, step: int) -> dict:
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)["meta"]

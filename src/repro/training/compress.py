@@ -1,0 +1,57 @@
+"""Gradient compression: symmetric int8 quantization with error feedback.
+
+At 1000+-node scale the gradient all-reduce dominates step time for small
+models / large data-parallel axes; int8 compression cuts the wire bytes 4x
+(vs f32) while error feedback (Karimireddy et al. 2019) keeps the *sum* of
+transmitted updates unbiased — the quantization residual is carried into the
+next step locally, so convergence is preserved (tested on a real training
+run in tests/training/test_compress.py).
+
+Functional API mirrors how it slots into train_step: the residual pytree
+lives next to the optimizer state.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: Any       # int8 pytree
+    scale: Any   # f32 per-tensor scales
+
+
+def init_residual(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, residual) -> tuple[Compressed, Any]:
+    """(grads + residual) -> int8; new residual = input - dequantized."""
+    def per(g, r):
+        x = g.astype(jnp.float32) + r
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        new_r = x - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    out = jax.tree.map(per, grads, residual)
+    istup = lambda x: isinstance(x, tuple)
+    q = jax.tree.map(lambda o: o[0], out, is_leaf=istup)
+    s = jax.tree.map(lambda o: o[1], out, is_leaf=istup)
+    new_r = jax.tree.map(lambda o: o[2], out, is_leaf=istup)
+    return Compressed(q, s), new_r
+
+
+def decompress(c: Compressed) -> Any:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, c.q, c.scale)
+
+
+def wire_bytes(c: Compressed) -> int:
+    """Bytes that would cross the network (int8 payload + scales)."""
+    qb = sum(x.size for x in jax.tree.leaves(c.q))
+    sb = 4 * len(jax.tree.leaves(c.scale))
+    return qb + sb

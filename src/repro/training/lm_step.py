@@ -1,0 +1,101 @@
+"""LM train/serve step factories — the functions the launcher jits and the
+dry-run lowers.
+
+Distributed-optimization tricks baked in:
+  * gradient accumulation by microbatch scan: per-microbatch grads are summed
+    LOCALLY and the (GSPMD-inserted) gradient all-reduce happens ONCE per
+    step, not once per microbatch — compute/communication overlap by
+    construction;
+  * optional int8+error-feedback gradient compression before the optimizer;
+  * remat policy comes from the ArchConfig (cfg.remat) inside the model.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.training import compress as C
+from repro.training import optim as O
+
+
+def make_train_step(lm: LM, optimizer: O.Optimizer, *, grad_accum: int = 1,
+                    compress_grads: bool = False) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params', opt_state',
+    metrics). ``opt_state`` carries the compression residual when enabled."""
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch)
+
+    def grads_of(params, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        B = batch["tokens"].shape[0]
+        assert B % grad_accum == 0
+        mb = B // grad_accum
+
+        def micro(carry, i):
+            acc, loss_sum = carry
+            sl = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0),
+                batch)
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, sl)
+            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+            return (acc, loss_sum + loss), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, loss_sum), _ = jax.lax.scan(
+            micro, (zero, jnp.float32(0.0)), jnp.arange(grad_accum))
+        grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+        loss = loss_sum / grad_accum
+        return loss, {"ce": loss}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        if compress_grads:
+            comp, new_res = C.compress(grads, opt_state["residual"])
+            grads = C.decompress(comp)
+            inner = opt_state["opt"]
+        else:
+            inner, new_res = opt_state, None
+        new_params, new_inner = optimizer.update(grads, inner, params)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        out_metrics = {"loss": loss.astype(jnp.float32),
+                       "grad_norm": gnorm, **{k: v for k, v in metrics.items()}}
+        if compress_grads:
+            return new_params, {"opt": new_inner, "residual": new_res}, out_metrics
+        return new_params, new_inner, out_metrics
+
+    return train_step
+
+
+def make_opt_state(params, optimizer: O.Optimizer, compress_grads: bool = False):
+    inner = optimizer.init(params)
+    if compress_grads:
+        return {"opt": inner, "residual": C.init_residual(params)}
+    return inner
+
+
+def make_serve_step(lm: LM) -> Callable:
+    """serve_step(params, cache, tokens (B,1)) -> (logits, cache') — the
+    function decode_* dry-run cells lower."""
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cache, tokens)
+    return serve_step
+
+
+def make_prefill_step(lm: LM) -> Callable:
+    """prefill(params, tokens, **frontend) -> logits — what prefill_* cells
+    lower (full forward, no labels)."""
+    def prefill_step(params, tokens, **kw):
+        logits, _ = lm.forward(params, tokens, **kw)
+        return logits
+    return prefill_step

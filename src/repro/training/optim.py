@@ -1,0 +1,135 @@
+"""Optimizers, dependency-free (no optax in this container): AdamW, Adafactor,
+SGD-momentum. Functional API:
+
+    opt = adamw(lr=3e-4)
+    state = opt.init(params)
+    new_params, new_state = opt.update(grads, state, params)
+
+All moments are f32 regardless of param dtype; parameter updates cast back.
+Adafactor exists for the co-design reason documented in the big-MoE configs:
+AdamW's 8 bytes/param does not fit single-pod HBM at 235B/398B scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+    name: str
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"step": jnp.zeros((), jnp.int32), "m": zeros,
+                "v": jax.tree.map(jnp.copy, zeros)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"step": step, "m": new_m, "v": new_v}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr: float = 3e-4, eps: float = 1e-30, clip: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0) -> Optimizer:
+    """Factored second moments (Shazeer & Stern 2018), no first moment:
+    state is O(rows+cols) per matrix instead of O(rows*cols) — the only way
+    235B/398B optimizer state fits the single-pod HBM budget."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def per(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "f": jax.tree.map(per, params, is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rden = jnp.mean(vr, axis=-1, keepdims=True)
+                u = g / (jnp.sqrt(vr / rden)[..., None] * jnp.sqrt(vc)[..., None, :]
+                         + 1e-16)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / (jnp.sqrt(v) + 1e-16)
+                ns = {"v": v}
+            # update clipping (RMS <= clip)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-16)
+            u = u / jnp.maximum(1.0, rms / clip)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["f"])
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = tdef.unflatten([o[0] for o in outs])
+        new_f = tdef.unflatten([o[1] for o in outs])
+        return new_p, {"step": step, "f": new_f}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def sgd(lr: float = 0.1, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params):
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+        out = jax.tree.map(upd, grads, state["mom"], params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"step": state["step"] + 1, "mom": new_m}
+
+    return Optimizer(init, update, "sgd")
+
+
+def get(name: str, lr: float) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}[name](lr=lr)

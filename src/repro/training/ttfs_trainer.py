@@ -1,0 +1,178 @@
+"""Training for the paper's TTFS classifier (784 -> 150, 10 groups x 15).
+
+Two trainers:
+
+  * ``train_dense_proxy`` — the deployed path. Cross-entropy on group-mean
+    logits of the dense execution W·x (exactly how the paper's GPU/CPU
+    baselines execute the exported parameters). Export then quantizes and
+    calibrates thresholds; TTFS accuracy lands slightly below dense accuracy,
+    matching the paper's 87.40 (TTFS) vs 87.69/87.70 (dense) ordering.
+
+  * ``train_surrogate`` — a genuinely temporal trainer: differentiable LIF
+    simulation in float with a sigmoid surrogate spike gradient and a
+    soft-TTFS (earliest-spike) readout. Slower; provided to demonstrate the
+    framework can train in the time domain, and used by tests at small scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import snn
+from repro.training import optim as O
+
+
+@dataclasses.dataclass
+class TrainResult:
+    model: snn.SNN
+    train_acc: float
+    test_acc: float
+    steps: int
+    wall_s: float
+
+
+def _group_logits(z: jnp.ndarray, g: int, p: int) -> jnp.ndarray:
+    return jnp.mean(z.reshape(z.shape[0], g, p), axis=-1)
+
+
+def train_dense_proxy(images: np.ndarray, labels: np.ndarray, *,
+                      test_images: np.ndarray | None = None,
+                      test_labels: np.ndarray | None = None,
+                      epochs: int = 5, batch: int = 256, lr: float = 3e-3,
+                      seed: int = 0, t_steps: int = 32,
+                      readout: snn.ReadoutSpec | None = None) -> TrainResult:
+    t0 = time.perf_counter()
+    readout = readout or snn.ReadoutSpec()
+    g, p = readout.n_groups, readout.per_group
+    n_in = images.shape[1]
+    n_out = g * p
+    key = jax.random.PRNGKey(seed)
+    model = snn.SNN(snn.Sequential(snn.Linear(n_in, n_out, key=key),
+                                   snn.LIF(t_steps=t_steps)),
+                    readout=readout, encode_t=t_steps)
+    params = {"w": model.body.layers[0].params["w"]}
+    opt = O.adamw(lr=lr, weight_decay=1e-4)
+    state = opt.init(params)
+
+    def loss_fn(params, x, y):
+        z = x @ params["w"]
+        logits = _group_logits(z, g, p)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    @jax.jit
+    def step(params, state, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    n = len(images)
+    rng = np.random.RandomState(seed)
+    steps = 0
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            params, state, _ = step(params, state,
+                                    jnp.asarray(images[idx]),
+                                    jnp.asarray(labels[idx]))
+            steps += 1
+
+    @jax.jit
+    def predict(params, x):
+        return jnp.argmax(_group_logits(x @ params["w"], g, p), axis=-1)
+
+    def acc(x, y):
+        preds = np.concatenate([np.asarray(predict(params, jnp.asarray(x[i:i + 2048])))
+                                for i in range(0, len(x), 2048)])
+        return float(np.mean(preds == y))
+
+    model.body.layers[0].params = {"w": params["w"]}
+    model.params = model.body.params = [model.body.layers[0].params, {}]
+    return TrainResult(
+        model=model, train_acc=acc(images, labels),
+        test_acc=acc(test_images, test_labels) if test_images is not None else -1.0,
+        steps=steps, wall_s=time.perf_counter() - t0)
+
+
+def train_surrogate(images: np.ndarray, labels: np.ndarray, *,
+                    epochs: int = 2, batch: int = 128, lr: float = 2e-3,
+                    seed: int = 0, t_steps: int = 16, tau: float = 16.0,
+                    threshold: float = 1.0, beta: float = 5.0,
+                    readout: snn.ReadoutSpec | None = None) -> TrainResult:
+    """Temporal surrogate-gradient training of the same topology.
+
+    Float LIF over T steps; spike surrogate sigma(beta*(v - thr)); readout
+    logit per group = max over time+group of a soft spike trace weighted by
+    (T - t) so EARLIER spikes score higher — a differentiable TTFS proxy."""
+    t0 = time.perf_counter()
+    readout = readout or snn.ReadoutSpec()
+    g, p = readout.n_groups, readout.per_group
+    n_in = images.shape[1]
+    n_out = g * p
+    key = jax.random.PRNGKey(seed)
+    w0 = jax.random.normal(key, (n_in, n_out), jnp.float32) / np.sqrt(n_in)
+    params = {"w": w0}
+    opt = O.adamw(lr=lr, weight_decay=1e-4)
+    state = opt.init(params)
+    decay = float(np.exp(-1.0 / tau))
+
+    def forward(params, x):
+        # TTFS-encode in float: frame raster (B, T, n_in)
+        tspike = jnp.floor((1.0 - x) * (t_steps - 1))
+        frames = (tspike[:, None, :] == jnp.arange(t_steps)[None, :, None])
+        frames = frames.astype(jnp.float32) * (x > 0)[:, None, :]
+        cur = jnp.einsum("btn,no->bto", frames, params["w"])
+
+        def step(v, i_t):
+            v = decay * v + i_t
+            s = jax.nn.sigmoid(beta * (v - threshold))   # surrogate spike
+            return v, s
+
+        _, s_t = jax.lax.scan(step, jnp.zeros((x.shape[0], n_out)),
+                              jnp.moveaxis(cur, 1, 0))
+        s_t = jnp.moveaxis(s_t, 0, 1)                    # (B, T, n_out)
+        w_time = (t_steps - jnp.arange(t_steps, dtype=jnp.float32)) / t_steps
+        score = jnp.max(s_t * w_time[None, :, None], axis=1)   # earlier => higher
+        return jnp.max(score.reshape(-1, g, p), axis=-1)       # (B, G)
+
+    def loss_fn(params, x, y):
+        logits = forward(params, x) * 8.0
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    @jax.jit
+    def step(params, state, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    n = len(images)
+    rng = np.random.RandomState(seed)
+    steps = 0
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            params, state, _ = step(params, state, jnp.asarray(images[idx]),
+                                    jnp.asarray(labels[idx]))
+            steps += 1
+
+    @jax.jit
+    def predict(params, x):
+        return jnp.argmax(forward(params, x), axis=-1)
+
+    acc = float(np.mean(np.asarray(predict(params, jnp.asarray(images[:4096])))
+                        == labels[:4096]))
+    model = snn.SNN(snn.Sequential(snn.Linear(n_in, n_out), snn.LIF(
+        t_steps=t_steps, tau=tau)), readout=readout, encode_t=t_steps)
+    model.body.layers[0].params = {"w": params["w"]}
+    model.params = model.body.params = [model.body.layers[0].params, {}]
+    return TrainResult(model=model, train_acc=acc, test_acc=-1.0, steps=steps,
+                       wall_s=time.perf_counter() - t0)

@@ -1,0 +1,33 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here — tests must see the default single CPU device.
+# Only launch/dryrun.py forces 512 placeholder devices (in a subprocess).
+
+
+@pytest.fixture(scope="session")
+def small_data():
+    """Small procedural-MNIST-like split for fast tests."""
+    from repro.data import mnist
+    xtr, ytr = mnist.generate(4096, seed=7)
+    xte, yte = mnist.generate(1024, seed=8)
+    return xtr, ytr, xte, yte
+
+
+@pytest.fixture(scope="session")
+def trained_artifact(small_data, tmp_path_factory):
+    """A real (small-training-run) exported artifact shared across tests."""
+    from repro.core import deploy
+    from repro.training.ttfs_trainer import train_dense_proxy
+    xtr, ytr, xte, yte = small_data
+    res = train_dense_proxy(xtr, ytr, test_images=xte, test_labels=yte,
+                            epochs=2, batch=256, seed=0)
+    path = str(tmp_path_factory.mktemp("art") / "model.npz")
+    art = deploy.export(res.model, path, calib_images=xtr[:1024],
+                        calib_labels=ytr[:1024])
+    return art, path, (xte, yte)

@@ -1,0 +1,71 @@
+"""Deployment artifact: roundtrip, integrity, single-artifact discipline."""
+
+import numpy as np
+import pytest
+
+from repro.core.artifact import Artifact, IntegrityError
+
+
+def _mk():
+    rng = np.random.RandomState(0)
+    return Artifact(
+        meta={"model": {"n_in": 8, "n_out": 4}, "encode": {"T": 8}},
+        arrays={"w_int8": rng.randint(-127, 128, (8, 4)).astype(np.int8),
+                "thresholds": rng.randint(1, 100, (4,)).astype(np.int32)})
+
+
+def test_roundtrip(tmp_path):
+    art = _mk()
+    p = str(tmp_path / "a.npz")
+    fp = art.save(p)
+    art2 = Artifact.load(p)
+    assert art2.meta["fingerprint"] == fp
+    for k in art.arrays:
+        assert np.array_equal(art.arrays[k], art2.arrays[k])
+    assert art2.m("model", "n_in") == 8
+    assert art2.m("missing", "key", default=42) == 42
+
+
+def test_tamper_detection(tmp_path):
+    art = _mk()
+    p = str(tmp_path / "a.npz")
+    art.save(p)
+    loaded = Artifact.load(p, verify=False)
+    loaded.arrays["w_int8"] = loaded.arrays["w_int8"].copy()
+    loaded.arrays["w_int8"][0, 0] += 1
+    with pytest.raises(IntegrityError):
+        loaded.verify()
+
+
+def test_missing_array_detection(tmp_path):
+    art = _mk()
+    p = str(tmp_path / "a.npz")
+    art.save(p)
+    loaded = Artifact.load(p, verify=False)
+    del loaded.arrays["thresholds"]
+    with pytest.raises(IntegrityError):
+        loaded.verify()
+
+
+def test_fingerprint_covers_meta(tmp_path):
+    art = _mk()
+    p = str(tmp_path / "a.npz")
+    fp1 = art.save(p)
+    art.meta["encode"]["T"] = 16
+    assert art.fingerprint() != fp1
+
+
+def test_export_has_all_deployment_fields(trained_artifact):
+    art, path, _ = trained_artifact
+    # weights, thresholds, connectivity descriptors, decode metadata:
+    for k in ("w_float", "w_int8", "thresholds", "w_padded", "thr_padded",
+              "gid_padded", "block_table", "group_ids"):
+        assert k in art.arrays, k
+    assert art.m("readout", "n_groups") == 10
+    assert art.m("readout", "per_group") == 15
+    assert art.m("encode", "T") == 32
+    assert art.m("events", "e_max") % 128 == 0
+    assert art.m("codesign", "n_pad") == 256          # 150 -> 2 x 128 lanes
+    # padded lanes can never fire
+    assert np.all(art["thr_padded"][150:] == np.int32(2**31 - 1))
+    assert np.all(art["gid_padded"][150:] == -1)

@@ -1,0 +1,57 @@
+"""Data pipelines: procedural MNIST + token stream determinism."""
+
+import numpy as np
+
+from repro.data import mnist
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+
+
+def test_mnist_deterministic_and_valid():
+    x1, y1 = mnist.generate(256, seed=3)
+    x2, y2 = mnist.generate(256, seed=3)
+    assert np.array_equal(x1, x2) and np.array_equal(y1, y2)
+    assert x1.shape == (256, 784) and x1.dtype == np.float32
+    assert x1.min() >= 0.0 and x1.max() <= 1.0
+    assert set(np.unique(y1)) <= set(range(10))
+
+
+def test_mnist_classes_are_linearly_separable_enough():
+    """A trivial nearest-centroid classifier should beat 60% — the dataset
+    must carry real class signal for the accuracy claims to mean anything."""
+    xtr, ytr = mnist.generate(2000, seed=11)
+    xte, yte = mnist.generate(500, seed=12)
+    cents = np.stack([xtr[ytr == c].mean(0) for c in range(10)])
+    pred = np.argmin(((xte[:, None] - cents[None]) ** 2).sum(-1), axis=1)
+    assert (pred == yte).mean() > 0.6
+
+
+def test_token_pipeline_deterministic_per_step_host():
+    cfg = TokenPipelineConfig(vocab=1000, seq_len=32, global_batch=8, n_hosts=4)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    for step in (0, 7):
+        for host in range(4):
+            a, b = p1.host_batch(step, host), p2.host_batch(step, host)
+            assert np.array_equal(a["tokens"], b["tokens"])
+    # different hosts / steps differ
+    assert not np.array_equal(p1.host_batch(0, 0)["tokens"],
+                              p1.host_batch(0, 1)["tokens"])
+    assert not np.array_equal(p1.host_batch(0, 0)["tokens"],
+                              p1.host_batch(1, 0)["tokens"])
+
+
+def test_token_pipeline_labels_are_shifted_tokens():
+    cfg = TokenPipelineConfig(vocab=100, seq_len=16, global_batch=2)
+    b = TokenPipeline(cfg).host_batch(0, 0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+    # autoregressive alignment: labels[t] continues tokens[t]
+    full = TokenPipeline(cfg)._host_rng(0, 0)  # smoke: rng accessible
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_global_batch_concatenates_hosts():
+    cfg = TokenPipelineConfig(vocab=50, seq_len=8, global_batch=8, n_hosts=2)
+    pipe = TokenPipeline(cfg)
+    g = pipe.global_batch_at(3)
+    h0, h1 = pipe.host_batch(3, 0), pipe.host_batch(3, 1)
+    assert np.array_equal(g["tokens"][:4], h0["tokens"])
+    assert np.array_equal(g["tokens"][4:], h1["tokens"])

@@ -1,0 +1,60 @@
+"""Elastic scaling + straggler mitigation logic."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.training.elastic import (StragglerMonitor, rebalance,
+                                    shard_assignment)
+
+
+def test_assignment_deterministic_and_total():
+    hosts = [f"host{i}" for i in range(8)]
+    a1 = shard_assignment(hosts, 64)
+    a2 = shard_assignment(hosts, 64)
+    assert a1 == a2
+    assert set(a1.keys()) == set(range(64))
+    assert set(a1.values()) <= set(hosts)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 100))
+def test_rebalance_minimal_movement(n_hosts, n_shards):
+    hosts = [f"h{i}" for i in range(n_hosts)]
+    a = shard_assignment(hosts, n_shards)
+    dead = hosts[0]
+    live = hosts[1:]
+    new, moved = rebalance(a, live)
+    # only the dead host's shards moved
+    assert set(moved) == {s for s, h in a.items() if h == dead}
+    for s in set(a) - set(moved):
+        assert new[s] == a[s]
+    assert all(h in live for h in new.values())
+
+
+def test_rejoin_restores_original_assignment():
+    """Rendezvous property: when the failed host rejoins, recomputing the
+    assignment lands exactly back on the original (no thrash)."""
+    hosts = [f"h{i}" for i in range(6)]
+    orig = shard_assignment(hosts, 48)
+    after = shard_assignment(hosts, 48)      # same membership -> identical
+    assert orig == after
+
+
+def test_straggler_detection_and_shares():
+    mon = StragglerMonitor(window=10, threshold=1.5)
+    for _ in range(10):
+        for h in ("a", "b", "c"):
+            mon.record(h, 1.0)
+        mon.record("slow", 3.0)
+    assert mon.stragglers() == ["slow"]
+    shares = mon.work_shares(["a", "b", "c", "slow"])
+    assert abs(sum(shares.values()) - 1.0) < 1e-9
+    assert shares["slow"] < shares["a"]      # straggler gets less work
+
+
+def test_no_straggler_flagged_when_uniform():
+    mon = StragglerMonitor()
+    for _ in range(5):
+        for h in ("a", "b", "c"):
+            mon.record(h, 1.0 + 0.01 * hash(h) % 3 * 0.01)
+    assert mon.stragglers() == []

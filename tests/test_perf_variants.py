@@ -1,0 +1,115 @@
+"""Correctness of §Perf optimization paths: every variant must compute the
+same function as its baseline (optimizations may not change semantics)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, reduced
+from repro.models.layers import chunked_attention, decode_attention
+
+
+def test_gqa_repeat_equals_grouped_chunked():
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(2, 8, 64, 16), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 2, 96, 16), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 2, 96, 16), jnp.float32)
+    for kw in (dict(causal=True, q_offset=32), dict(causal=False),
+               dict(causal=True, window=24, q_offset=32)):
+        a = chunked_attention(q, k, v, bq=32, bk=32, gqa="grouped", **kw)
+        b = chunked_attention(q, k, v, bq=32, bk=32, gqa="repeat", **kw)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_repeat_equals_grouped_decode():
+    rng = np.random.RandomState(1)
+    q = jnp.asarray(rng.randn(2, 8, 1, 16), jnp.float32)
+    kc = jnp.asarray(rng.randn(2, 2, 32, 16), jnp.float32)
+    vc = jnp.asarray(rng.randn(2, 2, 32, 16), jnp.float32)
+    for kw in (dict(cache_len=jnp.int32(20)),
+               dict(cache_len=jnp.int32(32), window=8, window_rotated=True)):
+        a = decode_attention(q, kc, vc, gqa="grouped", **kw)
+        b = decode_attention(q, kc, vc, gqa="repeat", **kw)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_moe_local_buf_mode_equals_oracle():
+    from repro.models.moe import moe_ffn, moe_ffn_dense_oracle
+    rng = np.random.RandomState(2)
+    p = {"router": jnp.asarray(rng.randn(16, 4) * 0.1, jnp.float32),
+         "w_gate": jnp.asarray(rng.randn(4, 16, 32) * 0.1, jnp.float32),
+         "w_up": jnp.asarray(rng.randn(4, 16, 32) * 0.1, jnp.float32),
+         "w_down": jnp.asarray(rng.randn(4, 32, 16) * 0.1, jnp.float32)}
+    x = jnp.asarray(rng.randn(2, 8, 16), jnp.float32)
+    y, _ = moe_ffn(x, p, n_experts=4, top_k=2, capacity_factor=8.0,
+                   buf_mode="local")
+    y2 = moe_ffn_dense_oracle(x, p, n_experts=4, top_k=2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_remat_policies_same_loss():
+    import dataclasses
+    from repro.models.model import LM
+    base = reduced(get_config("yi-6b"))
+    rng = np.random.RandomState(3)
+    toks = jnp.asarray(rng.randint(0, base.vocab, (2, 16)))
+    batch = {"tokens": toks, "labels": toks}
+    losses = {}
+    for pol in ("full", "dots", "none"):
+        cfg = dataclasses.replace(base, remat=pol != "none", remat_policy=pol)
+        lm = LM(cfg)
+        params = lm.init_params(jax.random.PRNGKey(0), jnp.float32)
+        loss, _ = lm.loss(params, batch)
+        g = jax.grad(lambda p: lm.loss(p, batch)[0])(params)
+        losses[pol] = (float(loss),
+                       float(sum(jnp.sum(jnp.abs(x)) for x in jax.tree.leaves(g))))
+    for pol in ("dots", "none"):
+        assert abs(losses[pol][0] - losses["full"][0]) < 1e-5
+        assert abs(losses[pol][1] - losses["full"][1]) / losses["full"][1] < 1e-4
+
+
+SHMAP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.models.moe import moe_ffn_shard_map, moe_ffn_dense_oracle
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(AxisType.Auto,) * 3)
+rng = np.random.RandomState(0)
+E, k, d, f = 4, 2, 16, 32
+p = {"router": jnp.asarray(rng.randn(d, E)*0.1, jnp.float32),
+     "w_gate": jnp.asarray(rng.randn(E, d, f)*0.1, jnp.float32),
+     "w_up": jnp.asarray(rng.randn(E, d, f)*0.1, jnp.float32),
+     "w_down": jnp.asarray(rng.randn(E, f, d)*0.1, jnp.float32)}
+x = jnp.asarray(rng.randn(4, 8, d), jnp.float32)
+with mesh:
+    fn = jax.jit(lambda x, p: moe_ffn_shard_map(
+        x, p, n_experts=E, top_k=k, capacity_factor=8.0, mesh=mesh))
+    y, aux = fn(x, p)
+    y2 = moe_ffn_dense_oracle(x, p, n_experts=E, top_k=k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+    g = jax.grad(lambda x, p: jnp.sum(fn(x, p)[0] ** 2))(x, p)
+    assert np.all(np.isfinite(np.asarray(g)))
+print("SHMAP_OK")
+"""
+
+
+@pytest.mark.slow
+def test_shard_map_moe_equals_oracle():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SHMAP_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2500:]
+    assert "SHMAP_OK" in proc.stdout

@@ -1,0 +1,28 @@
+"""Quantization: roundtrip bounds and leak mapping."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_error_bound(seed):
+    rng = np.random.RandomState(seed % 2**32)
+    w = rng.randn(32, 16).astype(np.float32)
+    q, scale = quant.quantize_weights(w)
+    assert q.dtype == np.int8
+    err = np.max(np.abs(quant.dequantize(q, scale) - w))
+    assert err <= scale / 2 + 1e-7          # round-to-nearest bound
+
+
+def test_quantize_zero_weights():
+    q, scale = quant.quantize_weights(np.zeros((4, 4), np.float32))
+    assert np.all(q == 0) and scale == 1.0
+
+
+def test_leak_shift_monotone():
+    shifts = [quant.leak_shift_from_tau(t) for t in (2.0, 8.0, 32.0, 128.0)]
+    assert shifts == sorted(shifts)          # longer tau -> weaker leak
+    assert quant.leak_shift_from_tau(np.inf) == 31

@@ -1,0 +1,82 @@
+"""Roofline machinery: HLO collective parsing with while-trip scaling, and
+the analytic cost model's sanity."""
+
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES
+from repro.distributed import analytic as AN
+from repro.distributed import hloparse as HP
+
+HLO = """\
+HloModule jit_f, is_scheduled=true
+
+%add.clone (x: f32[], y: f32[]) -> f32[] {
+  ROOT %add = f32[] add(%x, %y)
+}
+
+%cond (arg: (s32[], f32[4,16])) -> pred[] {
+  %c = s32[] constant(5)
+  %i = s32[] get-tuple-element(%arg), index=0
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (arg: (s32[], f32[4,16])) -> (s32[], f32[4,16]) {
+  %x = f32[4,16]{1,0} get-tuple-element(%arg), index=1
+  %ar = f32[4,16]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add.clone
+  %ag = f32[8,16]{1,0} all-gather(%ar), dimensions={0}
+  ROOT %t = (s32[], f32[4,16]) tuple(%i2, %ar)
+}
+
+ENTRY %main (p: f32[4,16]) -> f32[4,16] {
+  %ag0 = f32[16,16]{1,0} all-gather(%p), dimensions={0}
+  %w = (s32[], f32[4,16]) while(%t0), condition=%cond, body=%body
+  ROOT %r = f32[4,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_bytes_while_scaled():
+    coll = HP.collective_bytes_scaled(HLO)
+    # entry all-gather: 16*16*4 = 1024 B; body per trip: AR 4*16*4=256,
+    # AG 8*16*4=512; trip = 5
+    assert coll["all-gather"] == 1024 + 5 * 512
+    assert coll["all-reduce"] == 5 * 256
+    wire = HP.wire_bytes(coll)
+    assert wire == (1024 + 5 * 512) + 2 * 5 * 256
+
+
+def test_parse_module_structure():
+    comps, entry = HP.parse_module(HLO)
+    assert entry == "main"
+    assert comps["cond"].max_s32_const == 5
+    assert comps["main"].whiles == [("cond", "body")]
+
+
+def test_analytic_train_flops_close_to_6nd():
+    """For a dense arch, analytic total flops ~= remat_factor/6 * 6*N*D plus
+    attention — within a 2x band of the MODEL_FLOPS yardstick."""
+    cfg = get_config("yi-6b")
+    cell = SHAPES["train_4k"]
+    est = AN.estimate(cfg, cell, chips=256)
+    model = 6.0 * cfg.active_param_count() * cell.global_batch * cell.seq_len
+    assert 0.8 * model < est["flops_global"] < 2.5 * model
+
+
+def test_analytic_decode_is_memory_dominated():
+    cfg = get_config("yi-6b")
+    est = AN.estimate(cfg, SHAPES["decode_32k"], chips=256)
+    from repro.core.hw import TPU_V5E
+    c = est["flops_per_chip"] / TPU_V5E.peak_bf16_flops
+    m = est["bytes_per_chip"] / TPU_V5E.hbm_bandwidth
+    assert m > c          # single-token decode must be bandwidth-bound
+
+
+def test_analytic_swa_caps_attention():
+    """Mixtral's SWA must make long-context attention flops window-bounded."""
+    cfg = get_config("mixtral-8x7b")
+    est_sw = AN._attn_flops(cfg, SHAPES["prefill_32k"])
+    import dataclasses
+    cfg_full = dataclasses.replace(cfg, attn_window=None)
+    est_full = AN._attn_flops(cfg_full, SHAPES["prefill_32k"])
+    assert est_sw < est_full / 3

@@ -1,0 +1,71 @@
+"""TTFS encode/decode unit + property tests."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ttfs
+
+
+def test_encode_brighter_is_earlier():
+    x = jnp.asarray([[0.1, 0.5, 0.9, 1.0, 0.0]])
+    t = np.asarray(ttfs.encode_ttfs(x, T=32))
+    assert t[0, 3] <= t[0, 2] <= t[0, 1] <= t[0, 0]
+    assert t[0, 4] == 32  # zero pixel never spikes
+
+
+def test_encode_range_and_sentinel():
+    x = jnp.asarray(np.linspace(0, 1, 100)[None])
+    t = np.asarray(ttfs.encode_ttfs(x, T=16))
+    live = t[x > 0] if np.any(np.asarray(x) > 0) else t
+    assert t.min() >= 0 and t.max() <= 16
+    assert np.all(t[np.asarray(x) >= 1 / 255] <= 15)
+
+
+def test_frames_one_spike_per_neuron():
+    x = jnp.asarray(np.random.RandomState(0).rand(4, 50))
+    times = ttfs.encode_ttfs(x, T=8)
+    frames = np.asarray(ttfs.frames_from_times(times, 8))
+    assert frames.shape == (4, 8, 50)
+    assert np.all(frames.sum(axis=1) <= 1)      # TTFS contract: <= 1 spike
+    fired = frames.sum(axis=1)
+    assert np.array_equal(fired == 1, np.asarray(times) < 8)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_decode_earliest_group_wins(seed):
+    rng = np.random.RandomState(seed % 2**32)
+    G, P, T = 10, 15, 32
+    first = rng.randint(0, T + 1, (3, G * P)).astype(np.int32)
+    v = rng.randint(-100, 1000, (3, G * P)).astype(np.int32)
+    labels = np.asarray(ttfs.decode_labels(
+        jnp.asarray(first), jnp.asarray(v), n_groups=G, per_group=P,
+        sentinel=T, fallback="membrane"))
+    gmin = first.reshape(3, G, P).min(-1)
+    for b in range(3):
+        if gmin[b].min() < T:
+            assert gmin[b, labels[b]] == gmin[b].min()
+            # first-index tiebreak
+            assert labels[b] == int(np.argmin(gmin[b]))
+        else:
+            gv = v.reshape(3, G, P).max(-1)
+            assert labels[b] == int(np.argmax(gv[b]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_decode_permutation_within_group_invariant(seed):
+    """Shuffling neurons WITHIN a group never changes the decoded label."""
+    rng = np.random.RandomState(seed % 2**32)
+    G, P, T = 4, 6, 16
+    first = rng.randint(0, T + 1, (G, P)).astype(np.int32)
+    v = rng.randint(-50, 500, (G, P)).astype(np.int32)
+    l0 = int(ttfs.decode_labels(jnp.asarray(first.reshape(1, -1)),
+                                jnp.asarray(v.reshape(1, -1)), n_groups=G,
+                                per_group=P, sentinel=T)[0])
+    perm = rng.permutation(P)
+    l1 = int(ttfs.decode_labels(jnp.asarray(first[:, perm].reshape(1, -1)),
+                                jnp.asarray(v[:, perm].reshape(1, -1)),
+                                n_groups=G, per_group=P, sentinel=T)[0])
+    assert l0 == l1
