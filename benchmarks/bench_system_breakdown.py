@@ -44,9 +44,9 @@ def run(quick: bool = False) -> list[dict]:
     t_pack = time.perf_counter() - t0
 
     # stage 3: hardware run + orchestration (jitted event path)
-    _ = acc._fwd_event(frames.ids)          # warmup compile
+    _ = acc._fwd_event(frames.ids, frames.count)   # warmup compile
     t0 = time.perf_counter()
-    out_hw = acc._fwd_event(frames.ids)
+    out_hw = acc._fwd_event(frames.ids, frames.count)
     jax.block_until_ready(out_hw.labels)
     t_hw = time.perf_counter() - t0
 

@@ -29,8 +29,9 @@ def main(argv=None) -> None:
                     help="run a single bench (e.g. sparsity)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_crossplatform, bench_repeatability,
-                            bench_resources, bench_roofline, bench_sparsity,
+    from benchmarks import (bench_crossplatform, bench_event_pipeline,
+                            bench_repeatability, bench_resources,
+                            bench_roofline, bench_sparsity,
                             bench_system_breakdown)
     suite = [
         ("resources (Table 1)", bench_resources.main),
@@ -38,6 +39,7 @@ def main(argv=None) -> None:
         ("system_breakdown (Fig 2)", bench_system_breakdown.main),
         ("sparsity (Fig 3)", bench_sparsity.main),
         ("repeatability (sec 3.3)", bench_repeatability.main),
+        ("event_pipeline (staged vs fused)", bench_event_pipeline.main),
         ("roofline (LM zoo)", bench_roofline.main),
     ]
     for name, fn in suite:

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 gate: full test suite + the event-pipeline perf check.
+#
+#   scripts/check.sh            # everything
+#   scripts/check.sh --fast     # skip the slow subprocess/mesh tests
+#
+# Fails if any test fails OR if the fused event path is slower than the
+# staged event path on accelerator-scope latency (perf regression gate).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-q)
+if [[ "${1:-}" == "--fast" ]]; then
+    PYTEST_ARGS+=(-m "not slow")
+fi
+
+python -m pytest "${PYTEST_ARGS[@]}"
+python -m benchmarks.bench_event_pipeline --quick --check

@@ -16,10 +16,13 @@ conversion stage) and executes the padded block layout the planner emitted:
     paper's event-driven property, and an early-exit loop stops at the first
     output spike (the TTFS decision point) for latency mode.
 
-  * ``kernel="jnp" | "pallas"`` — the jnp path mirrors the kernel's block
-    structure op-for-op (and is fast on this CPU-only container); the pallas
-    path calls the actual TPU kernels (interpret mode on CPU). Both are
-    bit-exact against the reference; tests assert all three agree.
+  * ``kernel="jnp" | "pallas" | "fused"`` — the jnp path mirrors the kernel's
+    block structure op-for-op (and is fast on this CPU-only container); the
+    pallas path calls the actual TPU kernels (interpret mode on CPU); the
+    fused path runs the event→LIF→decode megakernel (event mode only): one
+    pass, state resident on-chip, the (T, N_pad) currents tensor never
+    materialized. All are bit-exact against the reference; tests assert they
+    agree.
 """
 
 from __future__ import annotations
@@ -43,8 +46,12 @@ class SNNAccelerator:
                  kernel: str = "jnp"):
         if mode not in ("batch", "event"):
             raise ValueError(mode)
-        if kernel not in ("jnp", "pallas"):
+        if kernel not in ("jnp", "pallas", "fused"):
             raise ValueError(kernel)
+        if kernel == "fused" and mode != "event":
+            raise ValueError(
+                "the fused megakernel consumes packed event frames; "
+                "use mode='event' (batch mode has its own matmul pipeline)")
         self.art = artifact
         self.mode, self.kernel = mode, kernel
         self.T = int(artifact.m("encode", "T"))
@@ -56,8 +63,7 @@ class SNNAccelerator:
         self.thr_padded = jnp.asarray(artifact["thr_padded"])  # (N_pad,) int32
         self._fwd_batch = jax.jit(self._forward_batch)
         self._fwd_event = jax.jit(self._forward_event)
-        self._fwd_event_latency = jax.jit(
-            jax.vmap(self._forward_event_one_early_exit))
+        self._fwd_event_latency = jax.jit(self._forward_event_latency)
 
     # ------------------------------------------------------------ batch mode
     def _currents_batch(self, raster: jnp.ndarray) -> jnp.ndarray:
@@ -111,13 +117,38 @@ class SNNAccelerator:
         mask = (ids != PAD)[..., None]
         return jnp.sum(jnp.where(mask, rows, 0), axis=1)
 
-    def _forward_event(self, ids: jnp.ndarray) -> SNNOutput:
-        """ids: (B, T, E_max). Full-T evaluation (throughput/accuracy mode)."""
+    def _forward_event(self, ids: jnp.ndarray, count: jnp.ndarray) -> SNNOutput:
+        """ids: (B, T, E_max), count: (B, T).
+        Full-T evaluation (throughput/accuracy mode)."""
+        if self.kernel == "fused":
+            from repro.kernels.fused_event_lif import ops as fused
+            res, labels = fused.fused_event_lif_decode(
+                ids, count, self.w_padded, self.thr_padded, self.leak_shift,
+                n_out=self.n_out,
+                n_groups=self.art.m("readout", "n_groups"),
+                per_group=self.art.m("readout", "per_group"),
+                fallback=self.art.m("readout", "fallback"))
+            first_l = res.first_spike[..., :self.n_out]
+            v_l = res.v_final[..., :self.n_out]
+            steps = jnp.full(labels.shape, self.T, jnp.int32)
+            return SNNOutput(labels, first_l, v_l, steps)
         currents = jax.vmap(self._event_currents)(ids)          # (B, T, N_pad)
         res = self._lif(jnp.moveaxis(currents, 1, 0))
         labels, first_l, v_l = self._decode_padded(res.first_spike, res.v_final)
         steps = jnp.full(labels.shape, self.T, jnp.int32)
         return SNNOutput(labels, first_l, v_l, steps)
+
+    def _forward_event_latency(self, ids: jnp.ndarray,
+                               count: jnp.ndarray) -> SNNOutput:
+        """(B, T, E_max) frames, stop each row at its first output spike."""
+        if self.kernel == "fused":
+            from repro.kernels.fused_event_lif import ops as fused
+            res, steps = fused.fused_event_lif_early_exit(
+                ids, count, self.w_padded, self.thr_padded, self.leak_shift)
+            labels, first_l, v_l = self._decode_padded(res.first_spike,
+                                                       res.v_final)
+            return SNNOutput(labels, first_l, v_l, steps)
+        return jax.vmap(self._forward_event_one_early_exit)(ids)
 
     def _forward_event_one_early_exit(self, ids: jnp.ndarray) -> SNNOutput:
         """ids: (T, E_max), single example, stop at first output spike."""
@@ -129,7 +160,12 @@ class SNNAccelerator:
 
     # -------------------------------------------------------------- frontend
     def forward(self, images=None, frames: EventFrames | None = None,
-                latency_mode: bool = False) -> SNNOutput:
+                latency_mode: bool = False,
+                check_overflow: bool = True) -> SNNOutput:
+        """``check_overflow=False`` skips the host-side overflow flag read for
+        callers (the serving engine) that already validated the frames at pack
+        time — the ``np.asarray(frames.overflow)`` read forces a device
+        round-trip per call on pre-packed device-resident frames."""
         if self.mode == "batch":
             assert images is not None, "batch mode consumes dense images"
             return self._fwd_batch(jnp.asarray(images, jnp.float32))
@@ -137,12 +173,12 @@ class SNNAccelerator:
             times = np.asarray(ttfs.encode_ttfs(
                 jnp.asarray(images, jnp.float32), self.T, self.x_min))
             frames = pack_events_batched(times, self.T, self.e_max)
-        if bool(np.any(np.asarray(frames.overflow))):
+        if check_overflow and bool(np.any(np.asarray(frames.overflow))):
             raise OverflowError(
                 "event frames exceed artifact E_max; re-export with larger "
                 "headroom or use the dense batch path")
         if latency_mode:
-            return self._fwd_event_latency(frames.ids)
-        return self._fwd_event(frames.ids)
+            return self._fwd_event_latency(frames.ids, frames.count)
+        return self._fwd_event(frames.ids, frames.count)
 
     __call__ = forward

@@ -1,0 +1,90 @@
+"""Jitted public wrappers for the fused event→LIF→decode megakernel.
+
+Backend policy (this is a PERF kernel, so it differs from the validation-only
+kernels): on TPU the Pallas megakernel runs natively; everywhere else the
+dispatch falls through to the jnp mirror, which implements the identical
+recurrence and is the fast portable path (Pallas interpret mode is for
+correctness tests, not production CPU serving). ``backend=`` forces either
+path explicitly — the kernel test suite pins ``backend="pallas"`` (interpret
+on CPU) against the mirror.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif_dynamics import LIFResult
+from repro.kernels.common import use_interpret
+from repro.kernels.fused_event_lif import ref as _ref
+from repro.kernels.fused_event_lif.kernel import (
+    fused_event_lif_decode_kernel,
+    fused_event_lif_early_exit_kernel,
+    fused_event_lif_kernel,
+)
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend not in ("pallas", "ref"):
+        raise ValueError(f"unknown backend {backend!r}")
+    return backend
+
+
+@functools.partial(jax.jit, static_argnames=("leak_shift", "backend"))
+def fused_event_lif(ids: jnp.ndarray, count: jnp.ndarray, w: jnp.ndarray,
+                    thresholds: jnp.ndarray, leak_shift: int,
+                    backend: str = "auto") -> LIFResult:
+    """Full-T fused pass. ids (B, T, E_max) int32, count (B, T) int32,
+    w (N_in, N_pad) int8 -> LIFResult over (B, N_pad)."""
+    if _resolve(backend) == "pallas":
+        first, v = fused_event_lif_kernel(ids, count, w, thresholds,
+                                          leak_shift,
+                                          interpret=use_interpret())
+    else:
+        first, v = _ref.fused_event_lif_ref(ids, w, thresholds, leak_shift)
+    return LIFResult(first_spike=first, v_final=v)
+
+
+@functools.partial(jax.jit, static_argnames=("leak_shift", "backend"))
+def fused_event_lif_early_exit(ids: jnp.ndarray, count: jnp.ndarray,
+                               w: jnp.ndarray, thresholds: jnp.ndarray,
+                               leak_shift: int, backend: str = "auto"
+                               ) -> tuple[LIFResult, jnp.ndarray]:
+    """Latency mode: stop at the first output spike. Returns
+    (LIFResult, steps (B,))."""
+    if _resolve(backend) == "pallas":
+        first, v, steps = fused_event_lif_early_exit_kernel(
+            ids, count, w, thresholds, leak_shift, interpret=use_interpret())
+    else:
+        first, v, steps = _ref.fused_event_lif_early_exit_ref(
+            ids, w, thresholds, leak_shift)
+    return LIFResult(first_spike=first, v_final=v), steps
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "leak_shift", "n_out", "n_groups", "per_group", "fallback", "backend"))
+def fused_event_lif_decode(ids: jnp.ndarray, count: jnp.ndarray,
+                           w: jnp.ndarray, thresholds: jnp.ndarray,
+                           leak_shift: int, *, n_out: int, n_groups: int,
+                           per_group: int, fallback: str = "membrane",
+                           backend: str = "auto"
+                           ) -> tuple[LIFResult, jnp.ndarray]:
+    """Megakernel with the grouped-TTFS comparator tree fused after the
+    T-loop (single neuron block per row). Returns (LIFResult, labels (B,))."""
+    T = ids.shape[1]
+    if _resolve(backend) == "pallas":
+        first, v, labels = fused_event_lif_decode_kernel(
+            ids, count, w, thresholds, leak_shift, n_out=n_out,
+            n_groups=n_groups, per_group=per_group, fallback=fallback,
+            interpret=use_interpret())
+    else:
+        from repro.core import ttfs
+        first, v = _ref.fused_event_lif_ref(ids, w, thresholds, leak_shift)
+        labels = ttfs.decode_labels(
+            first[..., :n_out], v[..., :n_out], n_groups=n_groups,
+            per_group=per_group, sentinel=T, fallback=fallback)
+    return LIFResult(first_spike=first, v_final=v), labels

@@ -1,0 +1,124 @@
+"""Pure-jnp mirror of the fused event→LIF megakernel.
+
+Op-for-op the same recurrence the Pallas kernel runs: per timestep, gather
+the weight rows of that step's events, sum them, then the LIF update and
+first-spike latch. Two formulation tricks keep the mirror fast on CPU while
+staying bit-exact (integer addition is associative and int8 values widened
+to an int32 accumulator sum to the same result):
+
+  * the weight matrix is augmented with one zero row and PAD ids are
+    remapped to it, so masked-out events contribute exactly zero WITHOUT a
+    select over materialized rows;
+  * gathered rows stay int8 and are reduced with an int32 accumulator
+    (4x less traffic than widening the gather).
+
+For small problems the whole (B, T, E) gather is done in one vectorized op
+(the per-step scan's dispatch overhead dominates there); past a size
+threshold the T-loop scan takes over so the (B, T, E, N_pad) row tensor is
+never materialized — which is exactly the megakernel's memory story and
+where the large-batch speedup comes from.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# one-shot gather materializes B*T*E rows of int8; past this many bytes the
+# per-step scan formulation is cheaper (and has bounded peak memory)
+_ONE_SHOT_ROW_BYTES = 48 * 1024 * 1024
+
+
+def _augment(w: jnp.ndarray) -> jnp.ndarray:
+    """(N_in, N_pad) int8 -> (N_in + 1, N_pad) with a zero row for PAD."""
+    return jnp.concatenate([w, jnp.zeros((1, w.shape[1]), w.dtype)], axis=0)
+
+
+def _safe_ids(ids: jnp.ndarray, n_in: int) -> jnp.ndarray:
+    return jnp.where(ids < 0, n_in, ids)
+
+
+def _step_currents(safe_t: jnp.ndarray, w_aug: jnp.ndarray) -> jnp.ndarray:
+    """safe_t (..., E) remapped ids -> (..., N_pad) int32 currents."""
+    return jnp.sum(w_aug[safe_t], axis=-2, dtype=jnp.int32)
+
+
+def fused_event_lif_ref(ids: jnp.ndarray, w: jnp.ndarray,
+                        thresholds: jnp.ndarray, leak_shift: int
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """ids (B, T, E_max) int32, w (N_in, N_pad) int8, thresholds (N_pad,)
+    -> (first_spike (B, N_pad), v_final (B, N_pad)) int32."""
+    B, T, E = ids.shape
+    N_in, N = w.shape
+    w_aug = _augment(w)
+    safe = _safe_ids(ids, N_in)
+    v0 = jnp.zeros((B, N), jnp.int32)
+    first0 = jnp.full((B, N), T, jnp.int32)
+
+    if B * T * E * N <= _ONE_SHOT_ROW_BYTES:
+        currents = _step_currents(safe, w_aug)            # (B, T, N)
+
+        def step(carry, xs):
+            v, first = carry
+            t, i_t = xs
+            v = v - jnp.right_shift(v, leak_shift) + i_t
+            fired = (v >= thresholds) & (first == T)
+            first = jnp.where(fired, t, first)
+            return (v, first), None
+
+        ts = jnp.arange(T, dtype=jnp.int32)
+        (v, first), _ = jax.lax.scan(step, (v0, first0),
+                                     (ts, jnp.moveaxis(currents, 1, 0)))
+        return first, v
+
+    def step(carry, xs):
+        v, first = carry
+        t, safe_t = xs
+        i_t = _step_currents(safe_t, w_aug)
+        v = v - jnp.right_shift(v, leak_shift) + i_t
+        fired = (v >= thresholds) & (first == T)
+        first = jnp.where(fired, t, first)
+        return (v, first), None
+
+    ts = jnp.arange(T, dtype=jnp.int32)
+    (v, first), _ = jax.lax.scan(step, (v0, first0),
+                                 (ts, jnp.moveaxis(safe, 1, 0)))
+    return first, v
+
+
+def fused_event_lif_early_exit_ref(ids: jnp.ndarray, w: jnp.ndarray,
+                                   thresholds: jnp.ndarray, leak_shift: int
+                                   ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                              jnp.ndarray]:
+    """Latency mode mirror: per example, integrate until ANY neuron fires —
+    only the steps actually executed are gathered (work follows the TTFS
+    decision point, not the window length). ids (B, T, E_max) ->
+    (first (B, N_pad), v_at_exit (B, N_pad), steps (B,)); same contract as
+    ``core.lif_dynamics.lif_scan_early_exit``."""
+    B, T, E = ids.shape
+    N_in, N = w.shape
+    w_aug = _augment(w)
+    safe = _safe_ids(ids, N_in)
+
+    def one(safe_one):                                  # (T, E)
+        def cond(state):
+            t, v, first = state
+            return (t < T) & jnp.all(first == T)
+
+        def body(state):
+            t, v, first = state
+            safe_t = jax.lax.dynamic_index_in_dim(safe_one, t, axis=0,
+                                                  keepdims=False)
+            i_t = _step_currents(safe_t, w_aug)
+            v = v - jnp.right_shift(v, leak_shift) + i_t
+            fired = (v >= thresholds) & (first == T)
+            first = jnp.where(fired, t, first)
+            return (t + 1, v, first)
+
+        t0 = jnp.int32(0)
+        v0 = jnp.zeros((N,), jnp.int32)
+        f0 = jnp.full((N,), T, jnp.int32)
+        t, v, first = jax.lax.while_loop(cond, body, (t0, v0, f0))
+        return first, v, t
+
+    return jax.vmap(one)(safe)

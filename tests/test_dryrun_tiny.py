@@ -18,16 +18,15 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs.registry import get_config, reduced
 from repro.configs.shapes import ShapeCell
 from repro.distributed import sharding as SH, hloparse as HP
 from repro.launch import specs as SP
+from repro.launch.mesh import make_test_mesh
 from repro.models.model import LM
 from repro.training import lm_step, optim as O
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
 cfg = reduced(get_config("yi-6b"))
 lm = LM(cfg, constrain=SH.make_constrainer(mesh))
 pspec = lm.param_specs(jnp.float32)
@@ -47,6 +46,8 @@ with mesh:
     compiled = step.lower(pspec, opt_spec, batch).compile()
     hlo = compiled.as_text()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax < 0.5 returns [dict]
+        cost = cost[0]
     mem = compiled.memory_analysis()
 coll = HP.collective_bytes_scaled(hlo)
 out["train"] = {"flops": float(cost.get("flops", 0)),

@@ -1,0 +1,165 @@
+"""Fused event→LIF→decode megakernel: bit-exactness against the staged
+pipeline and the software reference, in full-T and early-exit latency mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ttfs
+from repro.core.accelerator import SNNAccelerator
+from repro.core.agreement import full_agreement
+from repro.core import events
+from repro.core.events import pack_events_batched
+from repro.core.lif_dynamics import lif_scan, lif_scan_early_exit
+from repro.core.reference import SNNReference
+from repro.kernels.event_accum.ref import event_accum_ref
+from repro.kernels.fused_event_lif import ops as fused
+from repro.kernels.fused_event_lif.ref import (
+    fused_event_lif_early_exit_ref, fused_event_lif_ref)
+
+
+def _random_case(rng, B, T, N_in, N, e_max=None):
+    times = rng.randint(0, T + 1, (B, N_in)).astype(np.int32)
+    if e_max is None:
+        e_max = events.calibrate_e_max(times, T, lane=8)
+    frames = pack_events_batched(times, T, e_max)
+    assert not np.any(np.asarray(frames.overflow))
+    w = jnp.asarray(rng.randint(-127, 128, (N_in, N)), jnp.int8)
+    thr = jnp.asarray(rng.randint(20, 1500, (N,)), jnp.int32)
+    return frames, w, thr
+
+
+def _staged_oracle(frames, w, thr, ls, T):
+    cur = jax.vmap(lambda ids: event_accum_ref(ids, w))(frames.ids)
+    return lif_scan(jnp.moveaxis(cur, 1, 0), thr, ls, T)
+
+
+# ------------------------------------------------------------ kernel level
+@pytest.mark.parametrize("B,T,N_in,N,ls", [(1, 4, 50, 128, 4),
+                                           (3, 16, 100, 256, 2),
+                                           (2, 8, 784, 256, 6)])
+def test_fused_kernel_matches_staged(B, T, N_in, N, ls):
+    rng = np.random.RandomState(B * 10 + T)
+    frames, w, thr = _random_case(rng, B, T, N_in, N)
+    ref = _staged_oracle(frames, w, thr, ls, T)
+    for backend in ("ref", "pallas"):
+        res = fused.fused_event_lif(frames.ids, frames.count, w, thr, ls,
+                                    backend=backend)
+        assert np.array_equal(np.asarray(res.first_spike),
+                              np.asarray(ref.first_spike)), backend
+        assert np.array_equal(np.asarray(res.v_final),
+                              np.asarray(ref.v_final)), backend
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_fused_kernel_property(seed):
+    rng = np.random.RandomState(seed % 2**32)
+    B, T = int(rng.randint(1, 4)), int(rng.randint(1, 20))
+    N_in, N = int(rng.randint(10, 200)), 128 * int(rng.randint(1, 3))
+    ls = int(rng.randint(1, 10))
+    frames, w, thr = _random_case(rng, B, T, N_in, N)
+    ref = _staged_oracle(frames, w, thr, ls, T)
+    got = np.asarray(fused.fused_event_lif(
+        frames.ids, frames.count, w, thr, ls, backend="pallas").first_spike)
+    assert np.array_equal(got, np.asarray(ref.first_spike))
+    # sentinel semantics preserved: never-fired lanes report exactly T
+    assert np.all(got[got >= T] == T)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_fused_early_exit_matches_scan_early_exit(backend):
+    rng = np.random.RandomState(7)
+    B, T, N_in, N, ls = 5, 12, 100, 256, 4
+    frames, w, thr = _random_case(rng, B, T, N_in, N)
+    cur = jax.vmap(lambda ids: event_accum_ref(ids, w))(frames.ids)
+    res, steps = fused.fused_event_lif_early_exit(
+        frames.ids, frames.count, w, thr, ls, backend=backend)
+    for b in range(B):
+        r, s = lif_scan_early_exit(cur[b], thr, ls, T)
+        assert np.array_equal(np.asarray(res.first_spike[b]),
+                              np.asarray(r.first_spike))
+        assert np.array_equal(np.asarray(res.v_final[b]),
+                              np.asarray(r.v_final))
+        assert int(steps[b]) == int(s)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("fallback", ["membrane", "zero"])
+def test_fused_decode_matches_decode_labels(backend, fallback):
+    rng = np.random.RandomState(11)
+    B, T, N_in, N, ls = 4, 10, 120, 256, 3
+    G, P = 10, 15
+    n_out = G * P
+    frames, w, thr = _random_case(rng, B, T, N_in, N)
+    ref = _staged_oracle(frames, w, thr, ls, T)
+    want = ttfs.decode_labels(ref.first_spike[:, :n_out],
+                              ref.v_final[:, :n_out], n_groups=G,
+                              per_group=P, sentinel=T, fallback=fallback)
+    _, labels = fused.fused_event_lif_decode(
+        frames.ids, frames.count, w, thr, ls, n_out=n_out, n_groups=G,
+        per_group=P, fallback=fallback, backend=backend)
+    assert np.array_equal(np.asarray(labels), np.asarray(want))
+
+
+# ------------------------------------------------------- accelerator level
+def test_fused_requires_event_mode(trained_artifact):
+    art, _, _ = trained_artifact
+    with pytest.raises(ValueError):
+        SNNAccelerator(art, mode="batch", kernel="fused")
+
+
+def test_fused_accelerator_agrees_with_reference(trained_artifact):
+    art, _, (xte, yte) = trained_artifact
+    ref = SNNReference(art)
+    out_ref = ref.forward(xte[:128])
+    acc = SNNAccelerator(art, mode="event", kernel="fused")
+    out = acc.forward(xte[:128])
+    assert np.array_equal(np.asarray(out.labels), np.asarray(out_ref.labels))
+    assert np.array_equal(np.asarray(out.first_spike),
+                          np.asarray(out_ref.first_spike))
+    assert np.array_equal(np.asarray(out.v_final),
+                          np.asarray(out_ref.v_final))
+
+
+def test_fused_full_agreement_suite(trained_artifact):
+    """The 10k-path invariant, fused kernel edition: decoded labels AND
+    first-spike times match the reference elementwise."""
+    art, _, (xte, yte) = trained_artifact
+    rep = full_agreement(art, xte[:512], yte[:512], kernel="fused",
+                         runtimes=("accelerator-event",), chunk=256)
+    assert rep.exact_match, rep.summary()
+
+
+def test_fused_early_exit_labels_match_full_run(trained_artifact):
+    art, _, (xte, _) = trained_artifact
+    acc = SNNAccelerator(art, mode="event", kernel="fused")
+    full = acc.forward(xte[:64])
+    lat = acc.forward(xte[:64], latency_mode=True)
+    assert np.array_equal(np.asarray(full.labels), np.asarray(lat.labels))
+    assert np.all(np.asarray(lat.steps) <= art.m("encode", "T"))
+    # staged latency mode and fused latency mode agree on steps too
+    staged = SNNAccelerator(art, mode="event", kernel="jnp")
+    lat_staged = staged.forward(xte[:64], latency_mode=True)
+    assert np.array_equal(np.asarray(lat.steps), np.asarray(lat_staged.steps))
+    assert np.array_equal(np.asarray(lat.labels),
+                          np.asarray(lat_staged.labels))
+
+
+def test_fused_ref_mirror_is_oracle_for_pallas(trained_artifact):
+    """ops backend dispatch: both backends produce identical results on real
+    artifact data (the mirror IS the oracle for the TPU kernel)."""
+    art, _, (xte, _) = trained_artifact
+    acc = SNNAccelerator(art, mode="event", kernel="fused")
+    T = int(art.m("encode", "T"))
+    times = np.asarray(ttfs.encode_ttfs(
+        jnp.asarray(xte[:32], jnp.float32), T, float(art.m("encode", "x_min"))))
+    frames = pack_events_batched(times, T, int(art.m("events", "e_max")))
+    a = fused.fused_event_lif(frames.ids, frames.count, acc.w_padded,
+                              acc.thr_padded, acc.leak_shift, backend="ref")
+    b = fused.fused_event_lif(frames.ids, frames.count, acc.w_padded,
+                              acc.thr_padded, acc.leak_shift, backend="pallas")
+    assert np.array_equal(np.asarray(a.first_spike), np.asarray(b.first_spike))
+    assert np.array_equal(np.asarray(a.v_final), np.asarray(b.v_final))

@@ -81,10 +81,9 @@ SHMAP_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.models.moe import moe_ffn_shard_map, moe_ffn_dense_oracle
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+from repro.launch.mesh import make_test_mesh
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
 rng = np.random.RandomState(0)
 E, k, d, f = 4, 2, 16, 32
 p = {"router": jnp.asarray(rng.randn(d, E)*0.1, jnp.float32),
