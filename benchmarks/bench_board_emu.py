@@ -1,0 +1,150 @@
+"""Board-runtime emulator benchmark — the Table-3 analogue from the run itself.
+
+Runs the board emulator (``repro.board``) over the test split in both modes:
+
+  * full-T    — the agreement configuration: all T ticks, first-spike times
+    bit-exact with the software reference on every neuron;
+  * latency   — the paper's service configuration: stop at the TTFS decision
+    (first output spike); this is what the 0.1375 us/image measures.
+
+and reports what the paper's Table 3 reports — cycles/image, us/image at the
+80 MHz PL clock, and nJ/image of dynamic energy — from the emulator's own
+cycle/energy account (model constants: ``hw.PYNQ_COST``). Also cross-checks
+the vectorized batched fast path against the per-image Python scheduler on a
+slice: outputs AND traces must be identical.
+
+``--check`` (wired into scripts/check.sh) exits non-zero unless
+  1. board labels AND first-spike times match the software reference
+     bit-exactly on the slice, and
+  2. the batched fast path agrees with the per-image scheduler on labels,
+     first-spike times, steps, cycles, and energy.
+
+Emits ``results/bench/board_emu.json`` (schema-validated).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from benchmarks import common as CM
+from repro.board import SNNBoard, SNNBoardBatched
+from repro.core.hw import PYNQ_COST, PYNQ_Z2
+from repro.core.reference import SNNReference
+
+
+def _mode_row(name: str, trace, n: int, steps) -> dict:
+    clock = PYNQ_COST.clock_hz
+    return {
+        "runtime": name,
+        "scope": "board (cycle/energy model, PL datapath analogue)",
+        "clock_mhz": clock / 1e6,
+        "n_images": n,
+        "cycles_per_image": float(np.mean(trace.cycles)),
+        "us_per_image": float(np.mean(trace.us(clock))),
+        "nj_per_image": float(np.mean(trace.energy_nj)),
+        "events_per_image": float(np.mean(trace.events)),
+        "ticks_per_image": float(np.mean(trace.ticks)),
+        "stalls_per_image": float(np.mean(trace.stalls)),
+        "steps_mean": float(np.mean(steps)),
+    }
+
+
+def main(quick: bool = False, check: bool = False) -> int:
+    art, xte, yte = CM.get_artifact_and_data(quick=quick)
+    n = 512 if quick else 2000
+    n_py = 16 if quick else 48
+    imgs = xte[:n]
+
+    ref = SNNReference(art)
+    out_ref = ref.forward(imgs)
+
+    rows, ok = [], True
+
+    # ---- full-T: the agreement configuration -----------------------------
+    full = SNNBoardBatched(art)
+    out_full = full.forward(imgs)
+    labels_ok = np.array_equal(np.asarray(out_full.labels),
+                               np.asarray(out_ref.labels))
+    first_ok = np.array_equal(np.asarray(out_full.first_spike),
+                              np.asarray(out_ref.first_spike))
+    ok &= labels_ok and first_ok
+    acc = float(np.mean(np.asarray(out_full.labels) == yte[:n]))
+    r = _mode_row("board-emu-full", full.last_trace, n, out_full.steps)
+    r.update({"accuracy_pct": 100 * acc,
+              "ref_label_match": labels_ok, "ref_first_spike_match": first_ok})
+    rows.append(r)
+
+    # ---- latency: the TTFS service configuration -------------------------
+    lat = SNNBoardBatched(art, latency_mode=True)
+    out_lat = lat.forward(imgs)
+    lat_labels_ok = np.array_equal(np.asarray(out_lat.labels),
+                                   np.asarray(out_ref.labels))
+    ok &= lat_labels_ok
+    r = _mode_row("board-emu-latency", lat.last_trace, n, out_lat.steps)
+    r.update({"ref_label_match": lat_labels_ok})
+    rows.append(r)
+
+    # ---- per-image scheduler cross-check (both modes) --------------------
+    for mode_name, batched, latency in (("full", full, False),
+                                        ("latency", lat, True)):
+        py = SNNBoard(art, latency_mode=latency)
+        out_py = py.forward(imgs[:n_py])
+        out_b = batched.forward(imgs[:n_py])
+        tb, tp = batched.last_trace, py.last_trace
+        agree = (np.array_equal(np.asarray(out_py.labels), np.asarray(out_b.labels))
+                 and np.array_equal(np.asarray(out_py.first_spike),
+                                    np.asarray(out_b.first_spike))
+                 and np.array_equal(np.asarray(out_py.steps), np.asarray(out_b.steps))
+                 and np.array_equal(tp.cycles, tb.cycles)
+                 and np.array_equal(tp.energy_nj, tb.energy_nj))
+        ok &= agree
+        rows.append({
+            "runtime": f"board-emu-py-{mode_name}",
+            "scope": "board (per-image scheduler cross-check)",
+            "n_images": n_py,
+            "cycles_per_image": float(np.mean(tp.cycles)),
+            "nj_per_image": float(np.mean(tp.energy_nj)),
+            "batched_scheduler_exact": agree,
+        })
+
+    # ---- the paper's measured design point, for side-by-side -------------
+    rows.append({
+        "runtime": "fpga-paper-reference",
+        "scope": "paper Table 3 row (PYNQ-Z2 PL, reported; real MNIST)",
+        "clock_mhz": PYNQ_Z2.clock_hz / 1e6,
+        "cycles_per_image": float(PYNQ_Z2.service_cycles),
+        "us_per_image": PYNQ_Z2.service_latency_us,
+        "nj_per_image": PYNQ_Z2.dynamic_energy_nj,
+        "accuracy_pct": PYNQ_Z2.accuracy_pct,
+    })
+    CM.emit("board_emu", rows)
+
+    for r in rows:
+        cyc = r.get("cycles_per_image")
+        us = r.get("us_per_image")
+        nj = r.get("nj_per_image")
+        print(f"{r['runtime']:<24} "
+              f"cycles/img {cyc:10.1f}  "
+              + (f"us/img {us:8.4f}  " if us is not None else " " * 17)
+              + (f"nJ/img {nj:8.1f}" if nj is not None else ""))
+    print(f"agreement+cross-check: {'OK' if ok else 'FAILED'}")
+
+    if check and not ok:
+        print("CHECK FAILED: board emulator disagrees with the reference "
+              "or the batched fast path drifted from the scheduler",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small test split + fewer scheduler images")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless board==reference and batched==scheduler")
+    a = ap.parse_args()
+    sys.exit(main(quick=a.quick, check=a.check))

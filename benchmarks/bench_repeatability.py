@@ -29,6 +29,8 @@ def run(quick: bool = False) -> list[dict]:
         jax.block_until_ready(acc.forward(xte[:256]).labels)
         lat.append((time.perf_counter() - t0) / 256 * 1e3)
     rows = [{
+        "config": f"repeatability-{rep['runs']}-runs",
+        "scope": "system",
         "runs": rep["runs"],
         "image_run_pairs": rep["image_run_pairs"],
         "mismatches": rep["mismatches"],

@@ -25,7 +25,8 @@ def run(quick: bool = False) -> list[dict]:
          codesign.plan(n_in, n_out).max_neurons_vmem),
     ]:
         r = codesign.plan(ni, no)
-        rows.append({"config": label, "n_out": no, "n_pad": r.n_pad,
+        rows.append({"config": label, "scope": "planner",
+                     "n_out": no, "n_pad": r.n_pad,
                      "blocks": r.n_blocks, "synapses": r.synapses,
                      "vmem_bytes": r.vmem_bytes_total,
                      "vmem_util_pct": 100 * r.vmem_util,

@@ -40,6 +40,8 @@ def run(quick: bool = False) -> list[dict]:
             pa.append(np.asarray(acc.forward(x[i:i + 2000]).labels))
         pr, pa = np.concatenate(pr), np.concatenate(pa)
         rows.append({
+            "config": f"drop_{int(100 * ratio)}pct",
+            "scope": "agreement",
             "drop_pct": 100 * ratio,
             "hw_ttfs_accuracy_pct": 100 * float(np.mean(pa == labels)),
             "ref_accuracy_pct": 100 * float(np.mean(pr == labels)),

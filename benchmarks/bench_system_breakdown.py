@@ -58,16 +58,17 @@ def run(quick: bool = False) -> list[dict]:
 
     proj = CM.snn_event_cost_per_image(art, imgs)
     rows = [{
-        "stage": s, "ms_per_image": 1e3 * t / B,
+        "stage": s, "scope": "system", "ms_per_image": 1e3 * t / B,
         "share_pct": 100 * t / (t_ref + t_pack + t_hw + t_read)}
         for s, t in [("software reference evaluation", t_ref),
                      ("spike packing", t_pack),
                      ("hardware run + orchestration", t_hw),
                      ("sync/readback + compare", t_read)]]
-    rows.append({"stage": "END-TO-END", "ms_per_image":
+    rows.append({"stage": "END-TO-END", "scope": "system", "ms_per_image":
                  1e3 * (t_ref + t_pack + t_hw + t_read) / B,
                  "share_pct": 100.0})
     rows.append({"stage": "CALLOUT accelerator-scope (projected TPU)",
+                 "scope": "accelerator (projected)",
                  "ms_per_image": proj["proj_latency_us"] / 1e3,
                  "share_pct": None, "prediction_match": match})
     CM.emit("system_breakdown", rows)

@@ -90,6 +90,11 @@ def snn_dense_cost_per_image(art: Artifact, bytes_per_w: float = 1.0) -> dict:
 
 
 def emit(name: str, rows: list[dict]) -> None:
+    """Validate rows against the shared bench schema, then write the JSON.
+    Schema violations fail the bench loudly — results/bench/ files must stay
+    comparable across PRs (scope + identity + unit-suffixed metrics)."""
+    from benchmarks import schema
+    schema.validate_rows(name, rows)
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
         json.dump(rows, f, indent=1, default=float)

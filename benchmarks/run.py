@@ -9,7 +9,14 @@
 | Fig 2 (system path)   | bench_system_breakdown  |
 | Fig 3 (sparsity)      | bench_sparsity          |
 | §3.3 (repeatability)  | bench_repeatability     |
+| Table 3 (board model) | bench_board_emu         |
 | roofline (LM zoo)     | bench_roofline (reads results/dryrun) |
+
+Every module that writes results/bench/ JSON does so through
+``benchmarks.common.emit``, which validates rows against
+``benchmarks.schema`` so the files stay comparable across PRs (scope +
+identity + unit-suffixed metric fields). ``bench_roofline`` only prints
+(it reads results/dryrun) and emits nothing.
 
 JSON results land in results/bench/.
 """
@@ -29,13 +36,14 @@ def main(argv=None) -> None:
                     help="run a single bench (e.g. sparsity)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_crossplatform, bench_event_pipeline,
-                            bench_repeatability, bench_resources,
-                            bench_roofline, bench_sparsity,
+    from benchmarks import (bench_board_emu, bench_crossplatform,
+                            bench_event_pipeline, bench_repeatability,
+                            bench_resources, bench_roofline, bench_sparsity,
                             bench_system_breakdown)
     suite = [
         ("resources (Table 1)", bench_resources.main),
         ("crossplatform (Table 3)", bench_crossplatform.main),
+        ("board_emu (Table 3 board model)", bench_board_emu.main),
         ("system_breakdown (Fig 2)", bench_system_breakdown.main),
         ("sparsity (Fig 3)", bench_sparsity.main),
         ("repeatability (sec 3.3)", bench_repeatability.main),

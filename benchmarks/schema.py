@@ -1,0 +1,64 @@
+"""Shared schema for ``results/bench/*.json`` — keeps files comparable
+across PRs.
+
+Every bench emits a flat list of row dicts through ``common.emit``, which
+validates here before writing. The contract is deliberately small:
+
+  * rows is a non-empty list of dicts;
+  * every row carries ``scope`` (str — which measurement scope the numbers
+    belong to: accelerator / system / host / engine / board / planner /
+    agreement / paper-reference, the paper's §2.3 discipline);
+  * every row carries an identity field naming what was measured — one of
+    ``runtime``, ``path``, ``platform``, ``config``, ``stage``;
+  * every row carries at least one METRIC: a key whose underscore-separated
+    tokens include a unit (s, us, ms, hz, nj, pj, pct, bytes, cycles, img,
+    image) — e.g. ``us_per_image``, ``energy_nj_img``, ``vmem_bytes``;
+  * values are JSON scalars (or lists of them): no nested dicts, so rows
+    diff cleanly.
+
+Violations raise ``SchemaError`` naming the file, row index, and reason.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+ID_FIELDS = ("runtime", "path", "platform", "config", "stage")
+UNIT_TOKENS = {"s", "us", "ms", "hz", "nj", "pj", "pct", "bytes", "cycles",
+               "img", "image"}
+# numpy scalars are accepted — emit() serializes them via json default=float
+_SCALARS = (str, int, float, bool, type(None), np.integer, np.floating,
+            np.bool_)
+
+
+class SchemaError(ValueError):
+    pass
+
+
+def is_metric(key: str) -> bool:
+    return any(tok in UNIT_TOKENS for tok in key.split("_"))
+
+
+def validate_rows(name: str, rows) -> None:
+    if not isinstance(rows, list) or not rows:
+        raise SchemaError(f"{name}: rows must be a non-empty list, "
+                          f"got {type(rows).__name__}")
+    for i, row in enumerate(rows):
+        where = f"{name}.json row {i}"
+        if not isinstance(row, dict):
+            raise SchemaError(f"{where}: not a dict")
+        if not isinstance(row.get("scope"), str):
+            raise SchemaError(f"{where}: missing required str field 'scope'")
+        if not any(f in row for f in ID_FIELDS):
+            raise SchemaError(f"{where}: needs an identity field, one of "
+                              f"{ID_FIELDS}")
+        if not any(is_metric(k) for k in row):
+            raise SchemaError(f"{where}: no metric field (a key with a unit "
+                              f"token from {sorted(UNIT_TOKENS)})")
+        for k, v in row.items():
+            ok = isinstance(v, _SCALARS) or (
+                isinstance(v, list) and all(isinstance(x, _SCALARS) for x in v))
+            if not ok:
+                raise SchemaError(f"{where}: field {k!r} is not a JSON "
+                                  f"scalar or list of scalars "
+                                  f"({type(v).__name__})")

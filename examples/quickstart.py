@@ -1,17 +1,19 @@
-"""Quickstart — the paper's Table-2 workflow, end to end in ~40 lines.
+"""Quickstart — the paper's Table-2 workflow, end to end in ~50 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Model definition  ->  snn.SNN / snn.Sequential / snn.Linear / snn.LIF
 Artifact export   ->  deploy.export (one shared deployment artifact)
-Runtime invoke    ->  SNNAccelerator(...).forward(x)   (module-style call)
+Runtime invoke    ->  make_runtime(art, spec).forward(x)  (registry specs:
+                      reference / accelerator-* / board — all three consume
+                      the SAME artifact; the board emulator also accounts
+                      PL cycles and dynamic energy, the Table-3 analogue)
 """
 
 import numpy as np
 
 from repro import snn, deploy
-from repro.core.accelerator import SNNAccelerator
-from repro.core.reference import SNNReference
+from repro.core.runtimes import make_runtime
 from repro.data import mnist
 from repro.training.ttfs_trainer import train_dense_proxy
 
@@ -33,18 +35,28 @@ print(f"exported artifact: threshold={art['thresholds'][0]} "
       f"E_max={art.m('events', 'e_max')} "
       f"blocks={art.m('codesign', 'n_blocks')}x128 lanes")
 
-# 4. the SAME artifact drives both runtimes (model(x)-style forward)
-reference = SNNReference(art)
-accelerator = SNNAccelerator(art, mode="batch")
+# 4. the SAME artifact drives all three runtimes (model(x)-style forward):
+#    software reference, TPU-style accelerator, and the board-runtime
+#    emulator (the paper's PL datapath with cycle/energy accounting)
+reference = make_runtime(art, "reference")
+accelerator = make_runtime(art, "accelerator-batch")
+board = make_runtime(art, "board")
 out_ref = reference(xte)
 out_acc = accelerator(xte)
+out_board = board(xte)
 
-agree = np.array_equal(np.asarray(out_ref.labels), np.asarray(out_acc.labels))
-exact = np.array_equal(np.asarray(out_ref.first_spike),
-                       np.asarray(out_acc.first_spike))
 acc = float(np.mean(np.asarray(out_acc.labels) == yte))
-print(f"TTFS accuracy {acc:.2%}; reference<->accelerator: "
-      f"labels {'MATCH' if agree else 'MISMATCH'}, "
-      f"spike times {'BIT-EXACT' if exact else 'DIFFER'} "
-      f"on all {len(xte)} images")
-assert agree and exact
+print(f"TTFS accuracy {acc:.2%}; three-way agreement on all {len(xte)} images:")
+for name, out in (("accelerator", out_acc), ("board-emu", out_board)):
+    agree = np.array_equal(np.asarray(out_ref.labels), np.asarray(out.labels))
+    exact = np.array_equal(np.asarray(out_ref.first_spike),
+                           np.asarray(out.first_spike))
+    print(f"  reference<->{name:<12} labels {'MATCH' if agree else 'MISMATCH'}, "
+          f"spike times {'BIT-EXACT' if exact else 'DIFFER'}")
+    assert agree and exact
+
+# 5. the board emulator's cycle/energy account (Table-3 analogue, 80 MHz PL)
+print(f"board cycle/energy model: {board.last_trace.summary()}")
+lat = make_runtime(art, "board", latency_mode=True)
+lat(xte[:256])
+print(f"  TTFS decision latency : {lat.last_trace.summary()}")

@@ -1,19 +1,26 @@
 #!/usr/bin/env bash
 # Tier-1 gate: full test suite + the event-pipeline perf check.
 #
-#   scripts/check.sh            # everything
-#   scripts/check.sh --fast     # skip the slow subprocess/mesh tests
+#   scripts/check.sh                 # everything
+#   scripts/check.sh --fast          # skip the slow subprocess/mesh tests
+#   scripts/check.sh --benches-only  # just the bench gates (CI runs pytest
+#                                    # as its own step already)
 #
-# Fails if any test fails OR if the fused event path is slower than the
-# staged event path on accelerator-scope latency (perf regression gate).
+# Fails if any test fails, OR if the fused event path is slower than the
+# staged event path on accelerator-scope latency (perf regression gate), OR
+# if the board-runtime emulator disagrees with the software reference /
+# its batched fast path drifts from the per-image scheduler.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-PYTEST_ARGS=(-q)
-if [[ "${1:-}" == "--fast" ]]; then
-    PYTEST_ARGS+=(-m "not slow")
+if [[ "${1:-}" != "--benches-only" ]]; then
+    PYTEST_ARGS=(-q)
+    if [[ "${1:-}" == "--fast" ]]; then
+        PYTEST_ARGS+=(-m "not slow")
+    fi
+    python -m pytest "${PYTEST_ARGS[@]}"
 fi
 
-python -m pytest "${PYTEST_ARGS[@]}"
 python -m benchmarks.bench_event_pipeline --quick --check
+python -m benchmarks.bench_board_emu --quick --check

@@ -1,0 +1,22 @@
+"""Event-driven board-runtime emulator — the paper's PL datapath in software.
+
+The third runtime behind the single deployment artifact: an AER input event
+queue feeding 16 hardware groups x 128 neurons (int8 synapse rows, int32
+membranes, power-of-two leak shifts), per-tick event dispatch, grouped TTFS
+first-spike decode, and a cycle/energy account against ``hw.PYNQ_COST`` at
+80 MHz so the Table-3 analogue (cycles/image, us/image, nJ/image) falls out
+of every run.
+
+  * ``SNNBoard``        — readable per-image Python scheduler (the audit path)
+  * ``SNNBoardBatched`` — vectorized jax fast path over the group dimension
+                          (bit-exact with the scheduler, full-10k-scale)
+"""
+
+from repro.board.batched import SNNBoardBatched
+from repro.board.energy import BoardTrace, account
+from repro.board.event_queue import AEREventQueue
+from repro.board.neuron_core import GroupedNeuronCore
+from repro.board.runtime import SNNBoard
+
+__all__ = ["SNNBoard", "SNNBoardBatched", "BoardTrace", "account",
+           "AEREventQueue", "GroupedNeuronCore"]

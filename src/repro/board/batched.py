@@ -1,0 +1,136 @@
+"""Vectorized board emulator — the full-test-set fast path.
+
+Same microarchitectural semantics as ``board.runtime.SNNBoard`` (the per-image
+scheduler), evaluated batched in jax with the hardware group dimension
+explicit: currents are shaped (T, B, G, lane) and the integer LIF recurrence
+runs over per-group lanes exactly as the grouped neuron core does — so a
+full-10k three-way agreement run finishes in seconds, not hours.
+
+Bit-exactness contract (asserted by tests and the bench ``--check`` gate):
+labels, first-spike times, membranes, steps, AND the cycle/energy traces are
+identical to the per-image scheduler in both modes. The cycle/energy account
+is computed from the same per-tick event counts through the same
+``board.energy.account`` function; in latency mode the membrane reported is
+the membrane AT THE EXIT TICK (gathered from the scan's v history), matching
+the scheduler's early stop.
+
+``kernel="pallas"`` routes the full-T LIF recurrence through the fused
+Pallas kernel (grid over 128-lane group blocks, interpret mode on CPU);
+``kernel="jnp"`` is the default jnp mirror. Both are bit-exact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.board.energy import BoardTrace, account
+from repro.core import ttfs
+from repro.core.artifact import Artifact
+from repro.core.events import _step_counts
+from repro.core.hw import BoardCostModel, PYNQ_COST
+from repro.core.lif_dynamics import lif_scan
+from repro.core.reference import SNNOutput
+
+
+class SNNBoardBatched:
+    def __init__(self, artifact: Artifact, *, latency_mode: bool = False,
+                 kernel: str = "jnp", cost: BoardCostModel = PYNQ_COST):
+        if kernel not in ("jnp", "pallas"):
+            raise ValueError(
+                f"board kernel {kernel!r} not supported (use 'jnp' or "
+                f"'pallas'; 'fused' is an accelerator-family kernel)")
+        self.art = artifact
+        self.cost = cost
+        self.kernel = kernel
+        self.latency_mode = bool(latency_mode)
+        self.T = int(artifact.m("encode", "T"))
+        self.x_min = float(artifact.m("encode", "x_min"))
+        self.n_out = int(artifact.m("model", "n_out"))
+        self.depth = int(artifact.m("events", "e_max"))
+        n_pad = int(artifact["thr_padded"].shape[0])
+        if n_pad % cost.lane:
+            raise ValueError(f"n_pad {n_pad} not lane-aligned ({cost.lane})")
+        self.groups_used = n_pad // cost.lane
+        if self.groups_used > cost.groups:
+            raise ValueError(f"network needs {self.groups_used} groups; the "
+                             f"board has {cost.groups}")
+        self.n_pad = n_pad
+        self.w_padded = jnp.asarray(artifact["w_padded"])       # (N_in, n_pad)
+        self.thr_grouped = jnp.asarray(artifact["thr_padded"]).reshape(
+            self.groups_used, cost.lane)
+        self._core = jax.jit(self._core_impl)
+        self.last_trace: BoardTrace | None = None
+
+    # ------------------------------------------------------------ device core
+    def _lif_grouped(self, currents: jnp.ndarray, want_history: bool):
+        """currents (T, B, G, lane) -> (LIFResult over (B, G, lane), vs|None)."""
+        leak_shift = int(self.art.m("lif", "leak_shift"))
+        if want_history:
+            return lif_scan(currents, self.thr_grouped, leak_shift, self.T,
+                            return_v_history=True)
+        if self.kernel == "pallas":
+            from repro.kernels.lif import ops as lif_ops
+            T, B = currents.shape[:2]
+            res = lif_ops.lif_fused(currents.reshape(T, B, self.n_pad),
+                                    self.thr_grouped.reshape(self.n_pad),
+                                    leak_shift)
+            shaped = lambda a: a.reshape(B, self.groups_used, self.cost.lane)
+            return res._replace(first_spike=shaped(res.first_spike),
+                                v_final=shaped(res.v_final)), None
+        return lif_scan(currents, self.thr_grouped, leak_shift, self.T), None
+
+    def _core_impl(self, times: jnp.ndarray):
+        """times (B, N_in) int32 -> (labels, first_l, v_l, steps)."""
+        T, lane = self.T, self.cost.lane
+        B = times.shape[0]
+        raster = ttfs.frames_from_times(times, T)               # (B, T, N_in)
+        cur = jax.lax.dot_general(raster, self.w_padded,
+                                  (((2,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        cur = jnp.moveaxis(cur, 1, 0).reshape(T, B, self.groups_used, lane)
+        res, vs = self._lif_grouped(cur, want_history=self.latency_mode)
+        first = res.first_spike.reshape(B, self.n_pad)
+        first_l = first[:, :self.n_out]
+        if self.latency_mode:
+            # TTFS decision point: stop at the first output spike. Gather the
+            # membrane at each row's exit tick and mask spikes the scheduler
+            # never saw — identical to the per-image early stop.
+            t_first = jnp.min(first_l, axis=1)                  # (B,)
+            steps = jnp.where(t_first < T, t_first + 1, T).astype(jnp.int32)
+            v_exit = jnp.take_along_axis(
+                jnp.moveaxis(vs.reshape(T, B, self.n_pad), 0, 1),
+                (steps - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+            first_l = jnp.where(first_l <= t_first[:, None], first_l, T)
+            v_l = v_exit[:, :self.n_out]
+        else:
+            steps = jnp.full((B,), T, jnp.int32)
+            v_l = res.v_final.reshape(B, self.n_pad)[:, :self.n_out]
+        labels = ttfs.decode_labels(
+            first_l, v_l,
+            n_groups=self.art.m("readout", "n_groups"),
+            per_group=self.art.m("readout", "per_group"),
+            sentinel=T, fallback=self.art.m("readout", "fallback"))
+        return labels, first_l, v_l, steps
+
+    # ------------------------------------------------------------- host front
+    def forward(self, images) -> SNNOutput:
+        images = np.atleast_2d(np.asarray(images, np.float32))
+        times = np.asarray(ttfs.encode_ttfs(jnp.asarray(images), self.T,
+                                            self.x_min))
+        labels, first_l, v_l, steps = self._core(jnp.asarray(times))
+        steps_np = np.asarray(steps, np.int64)
+        counts = _step_counts(times, self.T)[:, :self.T].astype(np.int64)
+        cum = np.zeros((counts.shape[0], self.T + 1), np.int64)
+        np.cumsum(counts, axis=1, out=cum[:, 1:])
+        excess = np.maximum(counts - self.depth, 0)
+        cum_x = np.zeros_like(cum)
+        np.cumsum(excess, axis=1, out=cum_x[:, 1:])
+        idx = np.arange(counts.shape[0])
+        self.last_trace = account(cum[idx, steps_np], steps_np,
+                                  cum_x[idx, steps_np], self.n_pad, self.cost)
+        return SNNOutput(labels=labels, first_spike=first_l, v_final=v_l,
+                         steps=steps)
+
+    __call__ = forward

@@ -1,0 +1,77 @@
+"""Cycle and dynamic-energy accounting for the board emulator.
+
+One ``account`` function shared verbatim by the per-image Python scheduler
+and the vectorized batched fast path: the same expression evaluated on
+python ints or on (B,) numpy arrays, so the two paths cannot drift apart
+(their trace equality is asserted by tests and the bench ``--check`` gate).
+
+The model terms and their microarchitectural justification live on
+``hw.BoardCostModel`` (next to the paper's FPGA reference constants);
+this module only does the bookkeeping:
+
+    cycles = fixed + events*c_event + ticks*c_tick + stalls*c_stall + decode
+    nJ     = (events*pj_event + events*n_pad*pj_synop
+              + ticks*n_pad*pj_neuron_tick + pj_decode) / 1000
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.hw import BoardCostModel, PYNQ_COST
+
+
+@dataclasses.dataclass
+class BoardTrace:
+    """Per-image datapath account. Fields are (B,) arrays (batched) or the
+    same expressions evaluated per image and stacked — identical either way."""
+
+    ticks: np.ndarray        # ticks executed (T, or first-spike tick + 1)
+    events: np.ndarray       # AER events dispatched within the executed window
+    stalls: np.ndarray       # FIFO backpressure events (depth exceeded)
+    synops: np.ndarray       # int8 synaptic accumulates (events * n_pad)
+    cycles: np.ndarray       # total PL cycles
+    energy_nj: np.ndarray    # dynamic energy estimate
+
+    def us(self, clock_hz: float = PYNQ_COST.clock_hz) -> np.ndarray:
+        return self.cycles / clock_hz * 1e6
+
+    def summary(self, clock_hz: float = PYNQ_COST.clock_hz) -> str:
+        return (f"cycles/img {float(np.mean(self.cycles)):.1f}  "
+                f"({float(np.mean(self.us(clock_hz))):.4f} us @ "
+                f"{clock_hz / 1e6:.0f} MHz)  "
+                f"nJ/img {float(np.mean(self.energy_nj)):.1f}  "
+                f"events/img {float(np.mean(self.events)):.1f}  "
+                f"ticks/img {float(np.mean(self.ticks)):.1f}")
+
+
+def account(events, ticks, stalls, n_pad: int,
+            cost: BoardCostModel = PYNQ_COST) -> BoardTrace:
+    """Evaluate the cost model. ``events``/``ticks``/``stalls`` may be python
+    ints (one image) or int64 arrays (a batch); n_pad is the populated lane
+    count (synapse row width — padded lanes still clock, as on the board)."""
+    events = np.asarray(events, np.int64)
+    ticks = np.asarray(ticks, np.int64)
+    stalls = np.asarray(stalls, np.int64)
+    synops = events * n_pad
+    cycles = (cost.cycles_fixed
+              + events * cost.cycles_per_event
+              + ticks * cost.cycles_per_tick
+              + stalls * cost.cycles_per_stall
+              + cost.cycles_decode)
+    energy_nj = (events * cost.pj_per_event
+                 + synops * cost.pj_per_synop
+                 + ticks * (n_pad * cost.pj_per_neuron_tick)
+                 + cost.pj_per_decode) * 1e-3
+    return BoardTrace(ticks=ticks, events=events, stalls=stalls,
+                      synops=synops, cycles=cycles,
+                      energy_nj=np.asarray(energy_nj, np.float64))
+
+
+def stack_traces(traces: list[BoardTrace]) -> BoardTrace:
+    """Stack per-image scalar traces into one (B,)-array trace."""
+    return BoardTrace(*(np.stack([np.asarray(getattr(tr, f.name))
+                                  for tr in traces])
+                        for f in dataclasses.fields(BoardTrace)))

@@ -1,0 +1,94 @@
+"""Per-image board scheduler — the readable audit path of the emulator.
+
+``SNNBoard`` consumes the SAME deployment artifact as ``SNNReference`` and
+``SNNAccelerator`` (no conversion stage) and executes the paper's PL loop one
+image at a time, one tick at a time:
+
+    TTFS encode -> AER queue -> per-tick event dispatch into the grouped
+    neuron core -> leak/integrate/fire -> grouped TTFS first-spike decode
+
+with every tick's cycle and energy cost accounted against the board cost
+model. ``latency_mode=True`` stops at the tick of the first output spike
+(the paper's TTFS decision point — this is what the 0.1375 us/image service
+latency measures); the default full-T mode runs the whole window so
+first-spike times are bit-exact with the software reference on ALL neurons,
+which is what the three-way agreement harness compares.
+
+This path is deliberately plain Python/numpy — small, steppable, and slow.
+``board.batched.SNNBoardBatched`` is the vectorized fast path proven
+bit-exact against it (outputs AND traces).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.board.energy import BoardTrace, account, stack_traces
+from repro.board.event_queue import AEREventQueue
+from repro.board.neuron_core import GroupedNeuronCore
+from repro.core import ttfs
+from repro.core.artifact import Artifact
+from repro.core.hw import BoardCostModel, PYNQ_COST
+from repro.core.reference import SNNOutput
+
+
+class SNNBoard:
+    def __init__(self, artifact: Artifact, *, latency_mode: bool = False,
+                 cost: BoardCostModel = PYNQ_COST):
+        self.art = artifact
+        self.cost = cost
+        self.latency_mode = bool(latency_mode)
+        self.T = int(artifact.m("encode", "T"))
+        self.x_min = float(artifact.m("encode", "x_min"))
+        self.n_out = int(artifact.m("model", "n_out"))
+        self.depth = int(artifact.m("events", "e_max"))
+        self.core = GroupedNeuronCore.from_artifact(artifact, cost)
+        self.last_trace: BoardTrace | None = None
+
+    # ------------------------------------------------------------- one image
+    def run_image(self, times: np.ndarray) -> tuple[np.ndarray, np.ndarray,
+                                                    int, BoardTrace]:
+        """times (N_in,) int spike times -> (first (n_pad,), v (n_pad,),
+        ticks_executed, trace)."""
+        queue = AEREventQueue(times, self.T, self.depth)
+        core = self.core
+        core.reset()
+        events = stalls = 0
+        ticks = self.T
+        for t, ids in queue:
+            for nid in ids:
+                core.dispatch(int(nid))
+            events += len(ids)
+            stalls += queue.stalls_at(t)
+            fired = core.tick(t)
+            if self.latency_mode and fired:
+                ticks = t + 1
+                break
+        trace = account(events, ticks, stalls, core.n_pad, self.cost)
+        return core.first_flat.copy(), core.v_flat.copy(), ticks, trace
+
+    # ------------------------------------------------------------- batch API
+    def forward(self, images) -> SNNOutput:
+        images = np.atleast_2d(np.asarray(images, np.float32))
+        times = np.asarray(ttfs.encode_ttfs(jnp.asarray(images), self.T,
+                                            self.x_min))
+        firsts, vs, steps, traces = [], [], [], []
+        for row in times:
+            first, v, ticks, trace = self.run_image(row)
+            firsts.append(first[:self.n_out])
+            vs.append(v[:self.n_out])
+            steps.append(ticks)
+            traces.append(trace)
+        first_l = np.stack(firsts)
+        v_l = np.stack(vs)
+        labels = np.asarray(ttfs.decode_labels(
+            first_l, v_l,
+            n_groups=self.art.m("readout", "n_groups"),
+            per_group=self.art.m("readout", "per_group"),
+            sentinel=self.T, fallback=self.art.m("readout", "fallback")))
+        self.last_trace = stack_traces(traces)
+        return SNNOutput(labels=labels, first_spike=first_l, v_final=v_l,
+                         steps=np.asarray(steps, np.int32))
+
+    __call__ = forward

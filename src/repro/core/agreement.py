@@ -3,8 +3,11 @@
 The paper's strongest claim is not the 87.40% accuracy; it is that all
 10,000 board predictions match the software reference, across 5 repeated
 runs (50,000 image-run pairs, 0 mismatches). This module reproduces that
-protocol: run every runtime pair over the full test set, compare decoded
-labels AND first-spike times elementwise, and report mismatch counts.
+protocol as a THREE-WAY harness: software reference, accelerator runtime(s),
+and the board-runtime emulator all consume the same artifact; every non-
+reference runtime's decoded labels AND first-spike times are compared
+elementwise against the reference, and mismatch counts reported. Runtimes
+are named by registry spec (``core.runtimes``), so adding one is a string.
 """
 
 from __future__ import annotations
@@ -18,6 +21,7 @@ import numpy as np
 from repro.core.accelerator import SNNAccelerator
 from repro.core.artifact import Artifact
 from repro.core.reference import SNNReference
+from repro.core.runtimes import make_runtime
 
 
 @dataclasses.dataclass
@@ -52,7 +56,8 @@ def _run_chunked(fn: Callable, images: np.ndarray, chunk: int):
 
 
 def full_agreement(artifact: Artifact, images: np.ndarray, labels: np.ndarray,
-                   runtimes=("accelerator-batch", "accelerator-event"),
+                   runtimes=("accelerator-batch", "accelerator-event",
+                             "board"),
                    kernel: str = "jnp", chunk: int = 1024) -> AgreementReport:
     t0 = time.perf_counter()
     ref = SNNReference(artifact)
@@ -60,9 +65,8 @@ def full_agreement(artifact: Artifact, images: np.ndarray, labels: np.ndarray,
     acc = {"reference": float(np.mean(ref_labels == labels))}
     lmm, smm = {}, {}
     for rt in runtimes:
-        mode = rt.split("-")[1]
-        accel = SNNAccelerator(artifact, mode=mode, kernel=kernel)
-        a_labels, a_first = _run_chunked(accel.forward, images, chunk)
+        runner = make_runtime(artifact, rt, kernel=kernel)
+        a_labels, a_first = _run_chunked(runner.forward, images, chunk)
         lmm[rt] = int(np.sum(a_labels != ref_labels))
         smm[rt] = int(np.sum(np.any(a_first != ref_first, axis=-1)))
         acc[rt] = float(np.mean(a_labels == labels))

@@ -72,16 +72,26 @@ class Artifact:
 
     def verify(self) -> None:
         manifest = self.meta.get("manifest", {})
-        if set(manifest) != set(self.arrays):
+        missing = sorted(set(self.arrays) - set(manifest))
+        orphaned = sorted(set(manifest) - set(self.arrays))
+        if missing or orphaned:
+            parts = []
+            if missing:
+                parts.append(f"arrays missing from manifest: {missing}")
+            if orphaned:
+                parts.append(f"manifest entries with no array: {orphaned}")
+            raise IntegrityError("; ".join(parts))
+        bad = [name for name, digest in manifest.items()
+               if _array_hash(self.arrays[name]) != digest]
+        if bad:
             raise IntegrityError(
-                f"manifest/array mismatch: {sorted(set(manifest) ^ set(self.arrays))}")
-        for name, digest in manifest.items():
-            actual = _array_hash(self.arrays[name])
-            if actual != digest:
-                raise IntegrityError(f"array {name!r} hash mismatch")
+                f"array content hash mismatch for {bad} — the array bytes or "
+                f"their manifest entry were modified after export")
         fp = self.meta.get("fingerprint")
         if fp is not None and fp != self.fingerprint():
-            raise IntegrityError("artifact fingerprint mismatch")
+            raise IntegrityError(
+                "artifact fingerprint mismatch — the __meta__ blob (outside "
+                "the per-array manifest) was modified after export")
 
     # -------------------------------------------------------- conveniences
     def __getitem__(self, name: str) -> np.ndarray:

@@ -51,8 +51,54 @@ class FpgaReference:
     bram_tiles: int = 140                 # saturated — the design is BRAM-limited
 
 
+@dataclasses.dataclass(frozen=True)
+class BoardCostModel:
+    """Cycle/energy model of the PL event datapath driven by the board-runtime
+    emulator (``repro.board``). One constant per microarchitectural assumption,
+    so the Table-3 analogue is auditable term by term:
+
+      * AER dispatch is pipelined at II=1: each popped event costs
+        ``cycles_per_event`` and its int8 weight row is accumulated into all
+        ``groups`` hardware groups in parallel (the row spans every lane).
+      * The tick boundary (leak shift + integrate + threshold compare +
+        first-spike latch) updates every neuron in parallel:
+        ``cycles_per_tick`` per tick regardless of network width.
+      * The input FIFO has finite depth (the artifact's calibrated E_max);
+        events beyond the depth in one tick are never dropped — the ingress
+        backpressures, costing ``cycles_per_stall`` per excess event. This is
+        the hardware's overflow policy (the TPU runtime reroutes instead).
+      * ``cycles_fixed + cycles_decode`` is the zero-event service floor,
+        calibrated to the paper's 11-cycle service latency (0.1375 us at
+        80 MHz); the grouped TTFS comparator tree costs ``cycles_decode``.
+      * Energy terms are per-op dynamic-energy estimates in pJ, the same
+        order-of-magnitude discipline as ``TpuTarget`` (the paper's 31.6
+        nJ/image is itself a Vivado UG907 tool estimate): one synop is one
+        int8 row-element accumulate into an int32 membrane; one neuron-tick
+        is one leak-shift + compare; one event is one FIFO push+pop+route.
+    """
+
+    name: str = "pynq-z2-pl-model"
+    clock_hz: float = 80e6                # PL clock (paper's design point)
+    groups: int = 16                      # hardware neuron groups
+    lane: int = 128                       # neurons per group
+    cycles_per_event: int = 1             # AER pop + row fetch + accumulate
+    cycles_per_tick: int = 1              # leak/integrate/fire, all lanes
+    cycles_per_stall: int = 1             # FIFO backpressure per excess event
+    cycles_fixed: int = 8                 # pipeline fill (ingress + row fetch)
+    cycles_decode: int = 3                # grouped TTFS comparator tree
+    pj_per_synop: float = 2.0
+    pj_per_event: float = 10.0            # FIFO push+pop + router
+    pj_per_neuron_tick: float = 1.0
+    pj_per_decode: float = 500.0
+
+    @property
+    def neurons_direct(self) -> int:
+        return self.groups * self.lane
+
+
 TPU_V5E = TpuTarget()
 PYNQ_Z2 = FpgaReference()
+PYNQ_COST = BoardCostModel()
 
 
 def matmul_flops(m: int, k: int, n: int) -> int:

@@ -31,8 +31,12 @@ class LIFResult(NamedTuple):
 
 
 def lif_scan(currents: jnp.ndarray, thresholds: jnp.ndarray,
-             leak_shift: int, T: int) -> LIFResult:
-    """currents: (T, ..., N) int32 synaptic input per step."""
+             leak_shift: int, T: int, return_v_history: bool = False):
+    """currents: (T, ..., N) int32 synaptic input per step.
+
+    With ``return_v_history=True`` returns ``(LIFResult, vs)`` where
+    ``vs[t]`` is the membrane AFTER step t — the board emulator's batched
+    latency mode gathers the membrane at each row's exit tick from it."""
     n_shape = currents.shape[1:]
     v0 = jnp.zeros(n_shape, jnp.int32)
     first0 = jnp.full(n_shape, T, jnp.int32)
@@ -43,11 +47,12 @@ def lif_scan(currents: jnp.ndarray, thresholds: jnp.ndarray,
         v = v - jnp.right_shift(v, leak_shift) + i_t
         fired = (v >= thresholds) & (first == T)
         first = jnp.where(fired, t, first)
-        return (v, first), None
+        return (v, first), (v if return_v_history else None)
 
     ts = jnp.arange(T, dtype=jnp.int32)
-    (v, first), _ = jax.lax.scan(step, (v0, first0), (ts, currents))
-    return LIFResult(first_spike=first, v_final=v)
+    (v, first), vs = jax.lax.scan(step, (v0, first0), (ts, currents))
+    res = LIFResult(first_spike=first, v_final=v)
+    return (res, vs) if return_v_history else res
 
 
 def lif_scan_early_exit(currents: jnp.ndarray, thresholds: jnp.ndarray,

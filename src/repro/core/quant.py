@@ -33,7 +33,18 @@ def dequantize(w_q: np.ndarray, scale: float) -> np.ndarray:
 
 def leak_shift_from_tau(tau_steps: float) -> int:
     """Map a float leak time-constant (in steps) to the nearest power-of-two
-    shift: v <- v - (v >> s) realizes decay factor (1 - 2**-s) per step."""
+    shift: v <- v - (v >> s) realizes decay factor (1 - 2**-s) per step.
+
+    Edge cases (all deterministic, covered by tests):
+      * tau <= 0 or tau == inf — the "leak disabled" sentinels model configs
+        use; returns 31 (v >> 31 == 0 for plausible membranes, so no leak).
+      * NaN — rejected loudly; a NaN tau is a training bug, and silently
+        picking a shift would bake it into the deployed artifact.
+      * very large finite tau — decay -> 1; saturates at the largest
+        representable shift (15), the weakest realizable leak.
+    """
+    if np.isnan(tau_steps):
+        raise ValueError("tau_steps is NaN — refusing to pick a leak shift")
     if tau_steps <= 0 or np.isinf(tau_steps):
         return 31  # effectively no leak (v >> 31 == 0 for plausible v)
     decay = np.exp(-1.0 / tau_steps)

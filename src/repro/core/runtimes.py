@@ -1,0 +1,77 @@
+"""Runtime registry — one place that maps a spec string to a runner.
+
+Every runtime consumes the SAME deployment artifact and exposes
+``forward(images) -> SNNOutput``; the registry replaces the if/elif chains
+that used to live in the agreement harness and the serving engine with a
+declarative table, so adding a runtime (the board emulator is the third) is
+one ``@register`` away.
+
+Spec grammar: ``family[-option[-option]]``:
+
+    reference                      software reference (the oracle)
+    accelerator-batch[-pallas]     time-batched MXU path
+    accelerator-event[-jnp|pallas|fused]
+                                   packed-event path (kernel picked via the
+                                   suffix or the ``kernel=`` keyword)
+    board[-batched]                board emulator, vectorized fast path
+    board-py                       board emulator, per-image Python scheduler
+
+Factories ignore keywords they don't understand so harness-level defaults
+(e.g. ``kernel=``) can be passed uniformly across families.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.core.artifact import Artifact
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register(family: str):
+    def deco(factory: Callable) -> Callable:
+        _REGISTRY[family] = factory
+        return factory
+    return deco
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_runtime(artifact: Artifact, spec: str, **kw):
+    """Build the runtime named by ``spec`` over ``artifact``."""
+    family, _, opts = spec.partition("-")
+    if family not in _REGISTRY:
+        raise ValueError(f"unknown runtime family {family!r} in spec "
+                         f"{spec!r}; available: {available()}")
+    return _REGISTRY[family](artifact, opts, **kw)
+
+
+@register("reference")
+def _reference(art: Artifact, opts: str, **_):
+    from repro.core.reference import SNNReference
+    if opts:
+        raise ValueError(f"reference runtime takes no options, got {opts!r}")
+    return SNNReference(art)
+
+
+@register("accelerator")
+def _accelerator(art: Artifact, opts: str, kernel: str = "jnp", **_):
+    from repro.core.accelerator import SNNAccelerator
+    mode, _, k = opts.partition("-")
+    return SNNAccelerator(art, mode=mode or "batch", kernel=k or kernel)
+
+
+@register("board")
+def _board(art: Artifact, opts: str, latency_mode: bool = False,
+           kernel: str = "jnp", **_):
+    from repro.board import SNNBoard, SNNBoardBatched
+    if opts in ("", "batched"):
+        # forwarded, not swallowed: the batched path understands jnp/pallas
+        # and rejects kernels it doesn't (e.g. the accelerator-only "fused")
+        return SNNBoardBatched(art, latency_mode=latency_mode, kernel=kernel)
+    if opts == "py":
+        return SNNBoard(art, latency_mode=latency_mode)  # plain python path
+    raise ValueError(f"unknown board option {opts!r} (use '', 'batched', 'py')")

@@ -43,17 +43,34 @@ class SNNRequest:
 class SNNServeEngine:
     """Request-queue classifier serving: submit() → flush() → labels.
 
-    ``kernel`` selects the event-path implementation ("fused" = the
-    event→LIF→decode megakernel, the default; "jnp"/"pallas" = the staged
-    three-kernel pipeline). ``latency_mode`` serves with per-row early exit at
-    the first output spike (the paper's TTFS decision latency)."""
+    ``backend`` selects the runtime behind the queue:
+      * "accelerator" (default) — the packed-event TPU path; ``kernel``
+        selects its implementation ("fused" = the event→LIF→decode
+        megakernel, the default; "jnp"/"pallas" = the staged pipeline).
+      * "board" — the board-runtime emulator's batched fast path; every
+        flush additionally accounts PL cycles and dynamic energy (the
+        Table-3 analogue), surfaced in ``stats()``. The board never drops
+        overflow events (FIFO backpressure costs cycles instead), so the
+        dense reroute path does not apply.
+
+    ``latency_mode`` serves with per-row early exit at the first output
+    spike (the paper's TTFS decision latency)."""
 
     def __init__(self, artifact: Artifact, *, max_batch: int = 64,
-                 kernel: str = "fused", latency_mode: bool = False):
+                 kernel: str = "fused", latency_mode: bool = False,
+                 backend: str = "accelerator"):
+        if backend not in ("accelerator", "board"):
+            raise ValueError(f"unknown backend {backend!r}")
         self.art = artifact
+        self.backend = backend
         self.max_batch = int(max_batch)
         self.latency_mode = bool(latency_mode)
-        self.accel = SNNAccelerator(artifact, mode="event", kernel=kernel)
+        if backend == "board":
+            from repro.core.runtimes import make_runtime
+            self.accel = make_runtime(artifact, "board",
+                                      latency_mode=latency_mode)
+        else:
+            self.accel = SNNAccelerator(artifact, mode="event", kernel=kernel)
         self._dense = None                    # built lazily on first overflow
         self.T = int(artifact.m("encode", "T"))
         self.x_min = float(artifact.m("encode", "x_min"))
@@ -65,6 +82,9 @@ class SNNServeEngine:
         self.images_out = 0
         self.overflow_fallbacks = 0
         self.batches = 0
+        self.board_cycles = 0
+        self.board_nj = 0.0
+        self.board_stalls = 0
 
     # ----------------------------------------------------------------- queue
     def submit(self, image: np.ndarray) -> int:
@@ -106,6 +126,9 @@ class SNNServeEngine:
                           np.float32)
         for j, r in enumerate(chunk):
             images[j] = r.image                 # zero-pad to the fixed shape
+        if self.backend == "board":
+            self._serve_chunk_board(chunk, images)
+            return
         frames = self._pack(images)
         overflow = np.asarray(frames.overflow)  # checked ONCE, on host arrays
 
@@ -142,15 +165,41 @@ class SNNServeEngine:
             r.fallback_dense = bool(overflow[j])
         self.images_out += k
 
+    def _serve_chunk_board(self, chunk: list[SNNRequest],
+                           images: np.ndarray) -> None:
+        """Board-emulator backend: one batched emulator run per chunk, with
+        the PL cycle/energy account accumulated over the REAL rows only
+        (pad rows clock too, but they are not served traffic)."""
+        k = len(chunk)
+        t0 = time.perf_counter()
+        out = self.accel.forward(images)
+        jax.block_until_ready(out.labels)
+        self.accel_s += time.perf_counter() - t0
+        labels = np.asarray(out.labels)
+        steps = np.asarray(out.steps)
+        tr = self.accel.last_trace
+        self.board_cycles += int(np.sum(tr.cycles[:k]))
+        self.board_nj += float(np.sum(tr.energy_nj[:k]))
+        self.board_stalls += int(np.sum(tr.stalls[:k]))
+        self.batches += 1
+        for j, r in enumerate(chunk):
+            r.label = int(labels[j])
+            r.steps = int(steps[j])
+        self.images_out += k
+
     # ----------------------------------------------------------------- stats
     def reset_stats(self) -> None:
         """Zero the counters (e.g. after a warmup pass, so compile time does
         not pollute the measured trajectory)."""
         self.accel_s = self.system_s = 0.0
         self.images_out = self.overflow_fallbacks = self.batches = 0
+        self.board_cycles = 0
+        self.board_nj = 0.0
+        self.board_stalls = 0
 
     def stats(self) -> dict:
-        return {
+        st = {
+            "backend": self.backend,
             "accelerator_s": self.accel_s,
             "system_s": self.system_s,
             "host_overhead_s": max(0.0, self.system_s - self.accel_s),
@@ -162,3 +211,14 @@ class SNNServeEngine:
             "system_us_per_image": (1e6 * self.system_s / self.images_out
                                     if self.images_out else 0.0),
         }
+        if self.backend == "board":
+            n = max(1, self.images_out)
+            clock = self.accel.cost.clock_hz
+            st.update({
+                "board_cycles": self.board_cycles,
+                "board_stalls": self.board_stalls,
+                "board_cycles_per_image": self.board_cycles / n,
+                "board_model_us_per_image": 1e6 * self.board_cycles / n / clock,
+                "board_nj_per_image": self.board_nj / n,
+            })
+        return st

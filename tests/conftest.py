@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root too, so the benchmarks package (schema validation) is importable
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
 
 if importlib.util.find_spec("hypothesis") is None:
     # container image has no hypothesis; register the deterministic stub so

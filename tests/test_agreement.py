@@ -9,13 +9,15 @@ from repro.core.reference import SNNReference
 
 
 def test_full_agreement_all_runtimes(trained_artifact):
+    """Default harness is now three-way: reference / accelerator / board."""
     art, _, (xte, yte) = trained_artifact
     rep = full_agreement(art, xte[:512], yte[:512], chunk=256)
     assert rep.exact_match, rep.summary()
-    assert rep.label_mismatches["accelerator-batch"] == 0
-    assert rep.label_mismatches["accelerator-event"] == 0
-    assert rep.spike_time_mismatches["accelerator-batch"] == 0
-    assert rep.spike_time_mismatches["accelerator-event"] == 0
+    assert rep.runtimes == ["reference", "accelerator-batch",
+                            "accelerator-event", "board"]
+    for rt in ("accelerator-batch", "accelerator-event", "board"):
+        assert rep.label_mismatches[rt] == 0
+        assert rep.spike_time_mismatches[rt] == 0
 
 
 def test_pallas_kernel_path_agreement(trained_artifact):

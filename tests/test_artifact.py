@@ -1,5 +1,8 @@
 """Deployment artifact: roundtrip, integrity, single-artifact discipline."""
 
+import io
+import json
+
 import numpy as np
 import pytest
 
@@ -45,6 +48,72 @@ def test_missing_array_detection(tmp_path):
     del loaded.arrays["thresholds"]
     with pytest.raises(IntegrityError):
         loaded.verify()
+
+
+def _rewrite_npz(path, mutate):
+    """Load the raw npz payload, apply ``mutate(meta_dict, arrays_dict)``, and
+    write it back — simulating on-disk corruption/tampering of a saved
+    artifact without going through Artifact.save's re-hashing."""
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        arrays = {k: z[k].copy() for k in z.files if k != "__meta__"}
+    mutate(meta, arrays)
+    buf = io.BytesIO()
+    np.savez(buf, __meta__=np.frombuffer(
+        json.dumps(meta, sort_keys=True).encode(), dtype=np.uint8), **arrays)
+    with open(path, "wb") as f:
+        f.write(buf.getvalue())
+
+
+def test_load_rejects_bit_flipped_array_naming_it(tmp_path):
+    """A single flipped bit on disk must fail loudly AND name the array."""
+    p = str(tmp_path / "a.npz")
+    _mk().save(p)
+
+    def flip(meta, arrays):
+        arrays["w_int8"][0, 0] ^= 1
+
+    _rewrite_npz(p, flip)
+    with pytest.raises(IntegrityError, match="w_int8"):
+        Artifact.load(p)
+
+
+def test_load_rejects_tampered_manifest_naming_array(tmp_path):
+    """Editing a manifest digest inside __meta__ is tampering too — the load
+    must fail and name the offending array, not just 'mismatch'."""
+    p = str(tmp_path / "a.npz")
+    _mk().save(p)
+
+    def tamper(meta, arrays):
+        meta["manifest"]["thresholds"] = "0" * 64
+
+    _rewrite_npz(p, tamper)
+    with pytest.raises(IntegrityError, match="thresholds"):
+        Artifact.load(p)
+
+
+def test_load_rejects_meta_tamper_outside_manifest(tmp_path):
+    """Semantics-bearing meta (e.g. encode.T) is covered by the fingerprint."""
+    p = str(tmp_path / "a.npz")
+    _mk().save(p)
+
+    def tamper(meta, arrays):
+        meta["encode"]["T"] = 9999
+
+    _rewrite_npz(p, tamper)
+    with pytest.raises(IntegrityError, match="fingerprint"):
+        Artifact.load(p)
+
+
+def test_verify_names_missing_and_orphaned_arrays(tmp_path):
+    p = str(tmp_path / "a.npz")
+    _mk().save(p)
+    loaded = Artifact.load(p, verify=False)
+    del loaded.arrays["thresholds"]
+    loaded.arrays["rogue"] = np.zeros(3)
+    with pytest.raises(IntegrityError) as ei:
+        loaded.verify()
+    assert "thresholds" in str(ei.value) and "rogue" in str(ei.value)
 
 
 def test_fingerprint_covers_meta(tmp_path):

@@ -1,0 +1,65 @@
+"""Bench JSON schema: the emit() gate that keeps results/bench comparable."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks import schema
+
+
+def _row(**over):
+    base = {"runtime": "x", "scope": "accelerator", "us_per_image": 1.0}
+    base.update(over)
+    return base
+
+
+def test_valid_rows_pass():
+    schema.validate_rows("t", [_row(), _row(runtime=None, path="p",
+                                          extras=[1, 2.5, "s", None])])
+
+
+def test_empty_and_nonlist_rejected():
+    with pytest.raises(schema.SchemaError, match="non-empty"):
+        schema.validate_rows("t", [])
+    with pytest.raises(schema.SchemaError, match="non-empty"):
+        schema.validate_rows("t", {"runtime": "x"})
+
+
+def test_missing_scope_identity_metric_rejected():
+    with pytest.raises(schema.SchemaError, match="scope"):
+        schema.validate_rows("t", [{"runtime": "x", "us_per_image": 1.0}])
+    with pytest.raises(schema.SchemaError, match="identity"):
+        schema.validate_rows("t", [{"scope": "s", "us_per_image": 1.0}])
+    with pytest.raises(schema.SchemaError, match="metric"):
+        schema.validate_rows("t", [{"runtime": "x", "scope": "s", "n": 3}])
+
+
+def test_nested_values_rejected():
+    with pytest.raises(schema.SchemaError, match="scalar"):
+        schema.validate_rows("t", [_row(nested={"a": 1})])
+
+
+def test_metric_detection_uses_unit_tokens():
+    assert schema.is_metric("us_per_image")
+    assert schema.is_metric("energy_nj_img")
+    assert schema.is_metric("vmem_bytes")
+    assert schema.is_metric("accuracy_pct")
+    assert schema.is_metric("cycles_per_image")
+    assert not schema.is_metric("n_images")
+    assert not schema.is_metric("limiter")
+    assert not schema.is_metric("mismatches")
+
+
+def test_committed_bench_files_conform():
+    """Every JSON already under results/bench/ must satisfy the schema —
+    the cross-PR comparability contract, checked on the committed files."""
+    results = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+    found = 0
+    for fn in sorted(os.listdir(results)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(results, fn)) as f:
+            schema.validate_rows(fn[:-5], json.load(f))
+        found += 1
+    assert found >= 2          # event_pipeline.json + board_emu.json

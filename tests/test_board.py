@@ -1,0 +1,129 @@
+"""Board-runtime emulator: three-way agreement, scheduler<->batched
+bit-exactness (outputs AND cycle/energy traces), cost-model sanity, and the
+serving-engine board backend."""
+
+import numpy as np
+import pytest
+
+from repro.board import SNNBoard, SNNBoardBatched
+from repro.board.energy import account
+from repro.board.event_queue import AEREventQueue
+from repro.board.neuron_core import GroupedNeuronCore
+from repro.core.agreement import full_agreement
+from repro.core.hw import PYNQ_COST, BoardCostModel
+from repro.core.reference import SNNReference
+
+
+def test_three_way_agreement_1k_images(trained_artifact):
+    """The acceptance bar: reference / accelerator / board over >= 1,000
+    images, labels AND first-spike times bit-exact."""
+    art, _, (xte, yte) = trained_artifact
+    rep = full_agreement(art, xte[:1024], yte[:1024],
+                         runtimes=("accelerator-batch", "accelerator-event",
+                                   "board"),
+                         chunk=512)
+    assert rep.n_images >= 1000
+    assert rep.exact_match, rep.summary()
+    assert rep.label_mismatches["board"] == 0
+    assert rep.spike_time_mismatches["board"] == 0
+
+
+def test_scheduler_matches_batched_full_mode(trained_artifact):
+    """Per-image Python scheduler == vectorized fast path: labels, spike
+    times, membranes, steps, and the full cycle/energy trace."""
+    art, _, (xte, _) = trained_artifact
+    py, bb = SNNBoard(art), SNNBoardBatched(art)
+    o_py, o_bb = py.forward(xte[:24]), bb.forward(xte[:24])
+    assert np.array_equal(np.asarray(o_py.labels), np.asarray(o_bb.labels))
+    assert np.array_equal(np.asarray(o_py.first_spike),
+                          np.asarray(o_bb.first_spike))
+    assert np.array_equal(np.asarray(o_py.v_final), np.asarray(o_bb.v_final))
+    assert np.array_equal(np.asarray(o_py.steps), np.asarray(o_bb.steps))
+    for field in ("ticks", "events", "stalls", "synops", "cycles",
+                  "energy_nj"):
+        assert np.array_equal(getattr(py.last_trace, field),
+                              getattr(bb.last_trace, field)), field
+
+
+def test_scheduler_matches_batched_latency_mode(trained_artifact):
+    """Latency mode (stop at the TTFS decision): same equality, including
+    the exit-tick membrane the batched path gathers from the scan history."""
+    art, _, (xte, _) = trained_artifact
+    py = SNNBoard(art, latency_mode=True)
+    bb = SNNBoardBatched(art, latency_mode=True)
+    o_py, o_bb = py.forward(xte[:24]), bb.forward(xte[:24])
+    assert np.array_equal(np.asarray(o_py.labels), np.asarray(o_bb.labels))
+    assert np.array_equal(np.asarray(o_py.first_spike),
+                          np.asarray(o_bb.first_spike))
+    assert np.array_equal(np.asarray(o_py.v_final), np.asarray(o_bb.v_final))
+    assert np.array_equal(np.asarray(o_py.steps), np.asarray(o_bb.steps))
+    for field in ("ticks", "events", "stalls", "cycles", "energy_nj"):
+        assert np.array_equal(getattr(py.last_trace, field),
+                              getattr(bb.last_trace, field)), field
+    # early exit never exceeds the window and labels match the full run
+    full = SNNBoardBatched(art).forward(xte[:24])
+    assert np.all(np.asarray(o_bb.steps) <= art.m("encode", "T"))
+    assert np.array_equal(np.asarray(o_bb.labels), np.asarray(full.labels))
+
+
+def test_board_pallas_kernel_agrees(trained_artifact):
+    art, _, (xte, _) = trained_artifact
+    ref = SNNReference(art).forward(xte[:24])
+    out = SNNBoardBatched(art, kernel="pallas").forward(xte[:24])
+    assert np.array_equal(np.asarray(out.labels), np.asarray(ref.labels))
+    assert np.array_equal(np.asarray(out.first_spike),
+                          np.asarray(ref.first_spike))
+
+
+def test_aer_queue_schedule_and_backpressure():
+    T = 4
+    times = np.array([0, 2, 0, 3, 4, 1, 0], np.int32)   # time 4 == never (T)
+    q = AEREventQueue(times, T, depth=2)
+    assert q.total_events == 6
+    assert np.array_equal(q.events_at(0), [0, 2, 6])    # ascending ids
+    assert np.array_equal(q.events_at(1), [5])
+    assert np.array_equal(q.events_at(3), [3])
+    assert np.array_equal(q.counts(), [3, 1, 1, 1])
+    # 3 events into a depth-2 FIFO: 1 stall; no events are ever dropped
+    assert q.stalls_at(0) == 1 and q.stalls_at(1) == 0
+
+
+def test_cost_model_account_terms():
+    cost = BoardCostModel()
+    tr = account(events=10, ticks=5, stalls=2, n_pad=256, cost=cost)
+    assert int(tr.cycles) == (cost.cycles_fixed + 10 * cost.cycles_per_event
+                              + 5 * cost.cycles_per_tick
+                              + 2 * cost.cycles_per_stall + cost.cycles_decode)
+    assert int(tr.synops) == 10 * 256
+    expect_nj = (10 * cost.pj_per_event + 10 * 256 * cost.pj_per_synop
+                 + 5 * 256 * cost.pj_per_neuron_tick + cost.pj_per_decode) / 1e3
+    assert float(tr.energy_nj) == pytest.approx(expect_nj)
+    # zero-work floor is the paper-calibrated service overhead
+    floor = account(events=0, ticks=0, stalls=0, n_pad=256, cost=cost)
+    assert int(floor.cycles) == cost.cycles_fixed + cost.cycles_decode == 11
+
+
+def test_neuron_core_rejects_oversized_network():
+    cost = PYNQ_COST
+    n_pad = cost.neurons_direct + cost.lane          # one group too many
+    w = np.zeros((8, n_pad), np.int8)
+    thr = np.ones((n_pad,), np.int32)
+    with pytest.raises(ValueError, match="directly addressable"):
+        GroupedNeuronCore(w, thr, leak_shift=4, T=8, cost=cost)
+
+
+def test_serving_engine_board_backend(trained_artifact):
+    from repro.serving.snn_engine import SNNServeEngine
+    art, _, (xte, _) = trained_artifact
+    eng = SNNServeEngine(art, max_batch=32, backend="board")
+    ref_labels = np.asarray(SNNReference(art).forward(xte[:48]).labels)
+    got = eng.classify(xte[:48])
+    assert np.array_equal(got, ref_labels)
+    st = eng.stats()
+    assert st["backend"] == "board"
+    assert st["images_out"] == 48
+    assert st["board_cycles"] > 0
+    assert st["board_nj_per_image"] > 0
+    assert st["board_model_us_per_image"] == pytest.approx(
+        1e6 * st["board_cycles_per_image"] / PYNQ_COST.clock_hz)
+    assert st["overflow_fallbacks"] == 0    # board backpressures, never drops

@@ -43,6 +43,50 @@ def test_overflow_flagged():
     assert not bool(full.overflow[0])
 
 
+def test_overflow_boundary_exact_fit_is_not_overflow():
+    """count == e_max exactly fills the buffer — NOT an overflow; one more
+    event flips the flag. Guards the off-by-one at the buffer boundary."""
+    T, e_max = 4, 16
+    exact = np.full((1, e_max), 0, np.int32)       # 16 events at t=0
+    frames = events.pack_events_batched(exact, T, e_max)
+    assert not bool(frames.overflow[0])
+    assert int(frames.count[0, 0]) == e_max
+    assert not np.any(np.asarray(frames.ids[0, 0]) == events.PAD)
+
+    over = np.full((1, e_max + 1), 0, np.int32)    # 17 events at t=0
+    frames = events.pack_events_batched(over, T, e_max)
+    assert bool(frames.overflow[0])
+    assert int(frames.count[0, 0]) == e_max        # deterministic truncation
+    # the kept ids are the e_max lowest (stable (time, id) order)
+    assert np.array_equal(np.asarray(frames.ids[0, 0]), np.arange(e_max))
+
+
+def test_overflow_boundary_loop_packer_matches():
+    """The reference loop packer applies the same boundary rule."""
+    T, e_max = 3, 8
+    times = np.zeros((2, e_max + 1), np.int32)
+    times[0, -1] = T                               # row 0: exactly e_max at t=0
+    a = events.pack_events(times, T, e_max)
+    b = events.pack_events_batched(times, T, e_max)
+    assert np.array_equal(np.asarray(a.overflow), np.asarray(b.overflow))
+    assert np.array_equal(np.asarray(a.overflow), [False, True])
+    assert np.array_equal(np.asarray(a.count), np.asarray(b.count))
+
+
+def test_calibrate_e_max_exact_lane_boundary_rounding():
+    """A peak exactly on a lane multiple must NOT round up a whole extra
+    lane; one past it must."""
+    lane = 8
+    times = np.zeros((1, lane), np.int32)          # peak == lane exactly
+    assert events.calibrate_e_max(times, T=2, lane=lane) == lane
+    times = np.zeros((1, lane + 1), np.int32)      # peak == lane + 1
+    assert events.calibrate_e_max(times, T=2, lane=lane) == 2 * lane
+    # headroom scaling rounds up through the boundary too
+    times = np.zeros((1, lane), np.int32)
+    assert events.calibrate_e_max(times, T=2, lane=lane,
+                                  headroom=1.25) == 2 * lane
+
+
 def test_calibrate_e_max_lane_aligned():
     rng = np.random.RandomState(1)
     times = rng.randint(0, 17, (16, 784)).astype(np.int32)

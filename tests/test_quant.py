@@ -1,6 +1,7 @@
 """Quantization: roundtrip bounds and leak mapping."""
 
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quant
@@ -26,3 +27,31 @@ def test_leak_shift_monotone():
     shifts = [quant.leak_shift_from_tau(t) for t in (2.0, 8.0, 32.0, 128.0)]
     assert shifts == sorted(shifts)          # longer tau -> weaker leak
     assert quant.leak_shift_from_tau(np.inf) == 31
+
+
+def test_leak_shift_nonpositive_tau_is_no_leak_sentinel():
+    """tau <= 0 is the 'leak disabled' config sentinel: shift 31 means
+    v >> 31 == 0 for any plausible membrane, i.e. no leak. Pinned so the
+    deployed dynamics can't silently change under a config typo."""
+    for tau in (0.0, -1.0, -np.inf):
+        assert quant.leak_shift_from_tau(tau) == 31
+
+
+def test_leak_shift_nan_rejected():
+    with pytest.raises(ValueError, match="NaN"):
+        quant.leak_shift_from_tau(float("nan"))
+
+
+def test_leak_shift_very_large_tau_saturates():
+    """decay -> 1 as tau grows; the shift saturates at the largest
+    representable candidate (15), the weakest realizable leak."""
+    assert quant.leak_shift_from_tau(1e6) == 15
+    assert quant.leak_shift_from_tau(1e300) == 15
+    # and the saturation is stable: larger finite tau cannot decrease it
+    assert quant.leak_shift_from_tau(1e12) == 15
+
+
+def test_leak_shift_tiny_positive_tau_is_strongest_leak():
+    """tau -> 0+ gives decay -> 0; the closest realizable decay is
+    1 - 2**-1 = 0.5, i.e. shift 1 (the strongest hardware leak)."""
+    assert quant.leak_shift_from_tau(1e-9) == 1

@@ -1,0 +1,55 @@
+"""Runtime registry: spec parsing, construction, and error reporting."""
+
+import numpy as np
+import pytest
+
+from repro.board import SNNBoard, SNNBoardBatched
+from repro.core.accelerator import SNNAccelerator
+from repro.core.reference import SNNReference
+from repro.core.runtimes import available, make_runtime
+
+
+def test_available_families():
+    assert available() == ["accelerator", "board", "reference"]
+
+
+def test_spec_construction(trained_artifact):
+    art, _, _ = trained_artifact
+    assert isinstance(make_runtime(art, "reference"), SNNReference)
+    acc = make_runtime(art, "accelerator-event-fused")
+    assert isinstance(acc, SNNAccelerator)
+    assert acc.mode == "event" and acc.kernel == "fused"
+    acc = make_runtime(art, "accelerator-batch")
+    assert acc.mode == "batch" and acc.kernel == "jnp"
+    # harness-level kernel default applies when the spec doesn't pin one
+    acc = make_runtime(art, "accelerator-event", kernel="pallas")
+    assert acc.mode == "event" and acc.kernel == "pallas"
+    assert isinstance(make_runtime(art, "board"), SNNBoardBatched)
+    assert isinstance(make_runtime(art, "board-batched"), SNNBoardBatched)
+    board_py = make_runtime(art, "board-py", latency_mode=True)
+    assert isinstance(board_py, SNNBoard) and board_py.latency_mode
+    # kernel= is forwarded to the batched board, not swallowed
+    assert make_runtime(art, "board", kernel="pallas").kernel == "pallas"
+    with pytest.raises(ValueError, match="accelerator-family"):
+        make_runtime(art, "board", kernel="fused")
+
+
+def test_unknown_specs_fail_loudly(trained_artifact):
+    art, _, _ = trained_artifact
+    with pytest.raises(ValueError, match="unknown runtime family"):
+        make_runtime(art, "fpga")
+    with pytest.raises(ValueError, match="board option"):
+        make_runtime(art, "board-verilog")
+    with pytest.raises(ValueError, match="no options"):
+        make_runtime(art, "reference-fast")
+
+
+def test_all_registered_runtimes_run_the_same_artifact(trained_artifact):
+    """Every registry family produces a runner whose forward() agrees with
+    the reference on labels — the single-artifact discipline, registry-wide."""
+    art, _, (xte, _) = trained_artifact
+    ref = np.asarray(make_runtime(art, "reference").forward(xte[:16]).labels)
+    for spec in ("accelerator-batch", "accelerator-event", "board",
+                 "board-py"):
+        out = make_runtime(art, spec).forward(xte[:16])
+        assert np.array_equal(np.asarray(out.labels), ref), spec
