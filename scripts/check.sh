@@ -9,7 +9,9 @@
 # Fails if any test fails, OR if the fused event path is slower than the
 # staged event path on accelerator-scope latency (perf regression gate), OR
 # if the board-runtime emulator disagrees with the software reference /
-# its batched fast path drifts from the per-image scheduler.
+# its batched fast path drifts from the per-image scheduler, OR if the
+# continuous-batching serving tier serves a single label that is not
+# bit-exact with the software reference under open/closed-loop load.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -24,3 +26,4 @@ fi
 
 python -m benchmarks.bench_event_pipeline --quick --check
 python -m benchmarks.bench_board_emu --quick --check
+python -m benchmarks.bench_serving_load --quick --check

@@ -40,7 +40,9 @@ class SNNBoardBatched:
         if kernel not in ("jnp", "pallas"):
             raise ValueError(
                 f"board kernel {kernel!r} not supported (use 'jnp' or "
-                f"'pallas'; 'fused' is an accelerator-family kernel)")
+                f"'pallas' — registry specs 'board-batched-jnp' / "
+                f"'board-batched-pallas'; 'fused' is an accelerator-family "
+                f"kernel)")
         self.art = artifact
         self.cost = cost
         self.kernel = kernel

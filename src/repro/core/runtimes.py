@@ -6,15 +6,22 @@ that used to live in the agreement harness and the serving engine with a
 declarative table, so adding a runtime (the board emulator is the third) is
 one ``@register`` away.
 
-Spec grammar: ``family[-option[-option]]``:
+Spec grammar: ``family[-mode[-kernel]]`` — the kernel suffix parses the
+same way in every family (``opts.partition("-")``), so a spec that the
+docstring advertises always constructs:
 
     reference                      software reference (the oracle)
-    accelerator-batch[-pallas]     time-batched MXU path
+    accelerator-batch[-jnp|pallas] time-batched MXU path
     accelerator-event[-jnp|pallas|fused]
                                    packed-event path (kernel picked via the
                                    suffix or the ``kernel=`` keyword)
-    board[-batched]                board emulator, vectorized fast path
+    board[-batched[-jnp|pallas]]   board emulator, vectorized fast path
+                                   (kernel suffix selects the LIF impl)
     board-py                       board emulator, per-image Python scheduler
+                                   (no kernel suffix — it is plain python)
+
+``ADVERTISED_SPECS`` enumerates every concrete spec above; the grammar
+roundtrip test constructs each one, so docstring and parser cannot drift.
 
 Factories ignore keywords they don't understand so harness-level defaults
 (e.g. ``kernel=``) can be passed uniformly across families.
@@ -27,6 +34,17 @@ from typing import Callable
 from repro.core.artifact import Artifact
 
 _REGISTRY: dict[str, Callable] = {}
+
+#: every spec the module docstring advertises, fully expanded — each must
+#: construct against any exported artifact (pinned by the roundtrip test).
+ADVERTISED_SPECS = (
+    "reference",
+    "accelerator-batch", "accelerator-batch-jnp", "accelerator-batch-pallas",
+    "accelerator-event", "accelerator-event-jnp", "accelerator-event-pallas",
+    "accelerator-event-fused",
+    "board", "board-batched", "board-batched-jnp", "board-batched-pallas",
+    "board-py",
+)
 
 
 def register(family: str):
@@ -68,10 +86,18 @@ def _accelerator(art: Artifact, opts: str, kernel: str = "jnp", **_):
 def _board(art: Artifact, opts: str, latency_mode: bool = False,
            kernel: str = "jnp", **_):
     from repro.board import SNNBoard, SNNBoardBatched
-    if opts in ("", "batched"):
-        # forwarded, not swallowed: the batched path understands jnp/pallas
-        # and rejects kernels it doesn't (e.g. the accelerator-only "fused")
-        return SNNBoardBatched(art, latency_mode=latency_mode, kernel=kernel)
-    if opts == "py":
+    mode, _, k = opts.partition("-")
+    if mode in ("", "batched"):
+        # kernel suffix parses uniformly with the accelerator family
+        # ("board-batched-pallas"); forwarded, not swallowed: the batched
+        # path understands jnp/pallas and rejects kernels it doesn't
+        # (e.g. the accelerator-only "fused")
+        return SNNBoardBatched(art, latency_mode=latency_mode,
+                               kernel=k or kernel)
+    if mode == "py":
+        if k:
+            raise ValueError(f"board-py takes no kernel suffix, got {k!r} "
+                             "(the per-image scheduler is plain python)")
         return SNNBoard(art, latency_mode=latency_mode)  # plain python path
-    raise ValueError(f"unknown board option {opts!r} (use '', 'batched', 'py')")
+    raise ValueError(f"unknown board option {mode!r} "
+                     "(use '', 'batched', 'py')")

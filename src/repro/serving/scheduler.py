@@ -1,0 +1,464 @@
+"""Continuous-batching serving scheduler — the tier behind ``SNNServeEngine``.
+
+One scheduler owns the whole request path the paper's §2.3 discipline wants
+measured: an admission queue, deadline-aware micro-batch formation, N worker
+lanes each owning a runtime built from a registry spec string
+(``core.runtimes.make_runtime``), and per-request latency percentiles on top
+of the accelerator/system scope split. The overflow→dense reroute and the
+board cycle/energy account both live HERE — every front-end (the synchronous
+``SNNServeEngine`` facade, the load bench's open/closed-loop drivers) goes
+through the same code path, so serving semantics cannot fork per caller.
+
+Batch formation (the continuous-batching policy):
+  * a batch OPENS when a lane picks up the oldest queued request;
+  * it CLOSES at ``max_batch`` requests OR ``max_wait_us`` after opening,
+    whichever comes first — bounded formation latency under light load,
+    full batches under heavy load;
+  * every batch is zero-padded to ``max_batch`` rows so each lane runs ONE
+    compiled program regardless of traffic (the artifact's padded shapes).
+
+Worker lanes:
+  * ``workers >= 1`` — that many daemon threads, each with its OWN runtime
+    instance (own compiled programs, own lazy dense-fallback runtime, own
+    board trace) so lanes never contend on jax state;
+  * ``workers == 0`` — inline mode: no threads; ``drain()`` forms greedy
+    ``max_batch``-sized batches and serves them on the calling thread via
+    lane 0. Deterministic batch count — the facade's flush() semantics.
+
+Bit-exactness holds regardless of batching: every runtime evaluates rows
+independently, and pad rows never influence real ones, so a label served at
+queue depth 60 equals the label served alone — the load bench's ``--check``
+gate asserts exactly this against the software reference.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core.artifact import Artifact
+from repro.core.runtimes import make_runtime
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One admitted classification request, completed in place."""
+    rid: int
+    image: np.ndarray             # (N_in,) float32 in [0, 1]
+    label: int | None = None      # filled at completion
+    steps: int | None = None      # timesteps consumed (latency mode)
+    fallback_dense: bool = False  # served via the dense reroute
+    lane: int | None = None       # worker lane that served it
+    t_submit: float = 0.0         # perf_counter at admission
+    t_done: float = 0.0           # perf_counter at completion
+    error: str | None = None      # set instead of label if serving failed
+
+    @property
+    def latency_us(self) -> float:
+        return 1e6 * (self.t_done - self.t_submit)
+
+
+class _Lane:
+    """One worker lane: a runtime built from the spec, plus the lane-local
+    serve path (event packing, overflow reroute, board accounting). Each
+    lane's counters are merged into the scheduler under its lock, so lanes
+    themselves stay lock-free on the hot path."""
+
+    def __init__(self, lane_id: int, artifact: Artifact, spec: str,
+                 kernel: str | None, latency_mode: bool):
+        self.lane_id = lane_id
+        self.art = artifact
+        self.spec = spec
+        self.family, _, _ = spec.partition("-")
+        self.latency_mode = bool(latency_mode)
+        kw = {"latency_mode": latency_mode}
+        if kernel is not None:
+            kw["kernel"] = kernel        # None = the family's own default
+        self.runtime = make_runtime(artifact, spec, **kw)
+        self._dense = None               # built lazily on first overflow
+        self.T = int(artifact.m("encode", "T"))
+        self.x_min = float(artifact.m("encode", "x_min"))
+        self.e_max = int(artifact.m("events", "e_max"))
+
+    # ------------------------------------------------------------- serve path
+    def serve(self, images: np.ndarray, k: int) -> dict:
+        """Serve a zero-padded (max_batch, N_in) buffer whose first ``k``
+        rows are real traffic; returns labels/steps/fallback plus the
+        lane-local stat deltas for the scheduler to merge."""
+        if self.family == "accelerator" and self.runtime.mode == "event":
+            return self._serve_event(images, k)
+        return self._serve_forward(images, k)
+
+    def _serve_forward(self, images: np.ndarray, k: int) -> dict:
+        """board / reference / dense-accelerator path: forward(images)."""
+        t0 = time.perf_counter()
+        out = self.runtime.forward(images)
+        jax.block_until_ready(out.labels)
+        delta = {"accel_s": time.perf_counter() - t0,
+                 "labels": np.asarray(out.labels),
+                 "steps": np.asarray(out.steps),
+                 "fallback": np.zeros(len(images), bool),
+                 "overflow_fallbacks": 0}
+        trace = getattr(self.runtime, "last_trace", None)
+        if trace is not None:
+            # board family: PL cycles / dynamic energy for the REAL rows only
+            # (pad rows clock too, but they are not served traffic)
+            delta["board_cycles"] = int(np.sum(trace.cycles[:k]))
+            delta["board_nj"] = float(np.sum(trace.energy_nj[:k]))
+            delta["board_stalls"] = int(np.sum(trace.stalls[:k]))
+        return delta
+
+    def _serve_event(self, images: np.ndarray, k: int) -> dict:
+        """Packed-event accelerator path with the overflow→dense reroute."""
+        from repro.core import ttfs
+        from repro.core.events import pack_events_batched
+        import jax.numpy as jnp
+
+        times = np.asarray(ttfs.encode_ttfs(
+            jnp.asarray(images, jnp.float32), self.T, self.x_min))
+        frames = pack_events_batched(times, self.T, self.e_max)
+        overflow = np.asarray(frames.overflow)  # checked ONCE, on host arrays
+
+        t0 = time.perf_counter()
+        out = self.runtime.forward(frames=frames,
+                                   latency_mode=self.latency_mode,
+                                   check_overflow=False)
+        jax.block_until_ready(out.labels)
+        accel_s = time.perf_counter() - t0
+        labels = np.array(out.labels)           # writable copies (reroute
+        steps = np.array(out.steps)             # rows are patched below)
+
+        bad = np.nonzero(overflow[:k])[0]
+        if bad.size:
+            # overflow policy: reroute those rows through the dense
+            # time-batched path (same artifact, same semantics, no E_max
+            # cap). Runs on the full fixed-shape padded buffer so the dense
+            # program compiles once, not per distinct overflow-row count.
+            if self._dense is None:
+                self._dense = make_runtime(self.art, "accelerator-batch")
+            t0 = time.perf_counter()
+            dense_out = self._dense.forward(images=images)
+            jax.block_until_ready(dense_out.labels)
+            accel_s += time.perf_counter() - t0
+            labels[bad] = np.asarray(dense_out.labels)[bad]
+            steps[bad] = np.asarray(dense_out.steps)[bad]
+        return {"accel_s": accel_s, "labels": labels, "steps": steps,
+                "fallback": overflow, "overflow_fallbacks": int(bad.size)}
+
+
+class ServingScheduler:
+    """Admission queue + deadline-aware micro-batching + N worker lanes.
+
+    ``submit()`` is thread-safe and returns immediately with a request id;
+    ``result(rid)`` blocks one caller until its request completes (the
+    closed-loop client API); ``drain()`` blocks until the queue is empty and
+    returns every completed-but-unclaimed request (the synchronous facade
+    API). ``stats()`` reports both measurement scopes plus request-latency
+    percentiles and queue-depth stats; ``reset_stats()`` zeroes them (e.g.
+    after a warmup pass, so compile time does not pollute percentiles)."""
+
+    def __init__(self, artifact: Artifact, *, spec: str = "accelerator-event",
+                 workers: int = 0, max_batch: int = 64,
+                 max_wait_us: float = 2000.0, kernel: str | None = None,
+                 latency_mode: bool = False):
+        if workers < 0:
+            raise ValueError(f"workers must be >= 0, got {workers}")
+        self.art = artifact
+        self.spec = spec
+        self.family = spec.partition("-")[0]
+        self.max_batch = int(max_batch)
+        self.max_wait_us = float(max_wait_us)
+        self.workers = int(workers)
+        self.latency_mode = bool(latency_mode)
+        self.n_in = int(artifact.m("model", "n_in"))
+        self.lanes = [_Lane(i, artifact, spec, kernel, latency_mode)
+                      for i in range(max(1, workers))]
+
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._admission: collections.deque[ServeRequest] = collections.deque()
+        self._completed: dict[int, ServeRequest] = {}
+        self._claims: set[int] = set()       # rids owned by result() waiters
+        self._outstanding: set[int] = set()  # submitted, not yet completed
+        self._pending = 0
+        self._next_rid = 0
+        self._stop = False
+        self.reset_stats()
+        self._threads = [
+            threading.Thread(target=self._worker, args=(lane,), daemon=True,
+                             name=f"serve-lane-{lane.lane_id}")
+            for lane in (self.lanes if workers else [])]
+        for t in self._threads:
+            t.start()
+
+    # ---------------------------------------------------------------- client
+    def submit(self, image: np.ndarray) -> int:
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("scheduler is closed")
+            rid = self._next_rid
+            self._next_rid += 1
+            req = ServeRequest(rid, np.asarray(image, np.float32),
+                               t_submit=time.perf_counter())
+            self._admission.append(req)
+            self._outstanding.add(rid)
+            self._pending += 1
+            self._sample_depth()
+            self._cv.notify_all()
+            return rid
+
+    def result(self, rid: int, timeout: float | None = None) -> ServeRequest:
+        """Block until request ``rid`` completes; pops and returns it (the
+        closed-loop client API). Inline mode serves the queue first. The
+        rid is CLAIMED while waiting — a concurrent ``drain()`` will not
+        return it out from under this caller — and a rid that is neither
+        outstanding nor completed (already drained or returned) raises
+        KeyError instead of blocking forever."""
+        with self._cv:
+            if rid not in self._completed and rid not in self._outstanding:
+                raise KeyError(f"request {rid} is not outstanding — already "
+                               "claimed by drain()/result() or never "
+                               "submitted")
+            self._claims.add(rid)
+        try:
+            if not self._threads:
+                self._drain_inline()
+            deadline = (None if timeout is None
+                        else time.perf_counter() + timeout)
+            with self._cv:
+                while rid not in self._completed:
+                    remaining = (None if deadline is None
+                                 else deadline - time.perf_counter())
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError(f"request {rid} not completed "
+                                           f"within {timeout}s")
+                    self._cv.wait(timeout=remaining)
+                return self._completed.pop(rid)
+        finally:
+            with self._cv:
+                self._claims.discard(rid)
+
+    def drain(self) -> dict[int, ServeRequest]:
+        """Serve/await everything queued; pop and return every completed
+        request not claimed by a ``result()`` waiter."""
+        if not self._threads:
+            self._drain_inline()
+        with self._cv:
+            while self._pending:
+                self._cv.wait()
+            done = {rid: r for rid, r in self._completed.items()
+                    if rid not in self._claims}
+            for rid in done:
+                del self._completed[rid]
+            return done
+
+    def close(self) -> None:
+        """Stop the worker lanes. Batches in flight finish; the unserved
+        backlog is NOT drained — its requests complete immediately with
+        ``error="scheduler closed"`` so no waiter hangs."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join()
+        with self._cv:
+            now = time.perf_counter()
+            while self._admission:
+                r = self._admission.popleft()
+                r.error = "scheduler closed"
+                r.t_done = now
+                self._complete_locked(r)
+                self._pending -= 1
+            self._cv.notify_all()
+
+    # completed-but-unclaimed backlog bound: past this, the oldest unclaimed
+    # results are abandoned (counted in stats) instead of pinning their
+    # request images forever in a server whose callers never drain()
+    COMPLETED_WINDOW = 65536
+
+    def _complete_locked(self, r: ServeRequest) -> None:
+        """Caller holds the lock: publish a finished request, releasing its
+        outstanding slot and bounding the unclaimed backlog."""
+        self._outstanding.discard(r.rid)
+        self._completed[r.rid] = r
+        while len(self._completed) > self.COMPLETED_WINDOW:
+            victim = next((rid for rid in self._completed
+                           if rid not in self._claims), None)
+            if victim is None:               # everything left has a waiter
+                break
+            del self._completed[victim]
+            self._abandoned += 1
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ------------------------------------------------------- batch formation
+    def _form_batch(self) -> list[ServeRequest] | None:
+        """Blocking formation for worker lanes: open on the oldest queued
+        request, close at max_batch OR max_wait_us — whichever first."""
+        with self._cv:
+            while not self._admission and not self._stop:
+                self._cv.wait()
+            if self._stop:                   # no NEW batches after close():
+                return None                  # the backlog is failed, not served
+            batch = [self._admission.popleft()]
+            deadline = time.perf_counter() + self.max_wait_us * 1e-6
+            while len(batch) < self.max_batch:
+                if self._admission:
+                    batch.append(self._admission.popleft())
+                    continue
+                remaining = deadline - time.perf_counter()
+                if self._stop or remaining <= 0:
+                    break
+                self._cv.wait(timeout=remaining)
+            self._sample_depth()
+            return batch
+
+    def _worker(self, lane: _Lane) -> None:
+        while True:
+            batch = self._form_batch()
+            if batch is None:
+                return
+            self._serve_batch(lane, batch)
+
+    def _drain_inline(self) -> None:
+        """Inline mode: greedy max_batch-sized batches on the caller thread
+        (deterministic batch count — the facade's flush() semantics)."""
+        while True:
+            with self._cv:
+                if not self._admission:
+                    return
+                batch = []
+                while self._admission and len(batch) < self.max_batch:
+                    batch.append(self._admission.popleft())
+            self._serve_batch(self.lanes[0], batch)
+
+    # -------------------------------------------------------------- serving
+    def _serve_batch(self, lane: _Lane, batch: list[ServeRequest]) -> None:
+        t0 = time.perf_counter()
+        k = len(batch)
+        try:
+            images = np.zeros((self.max_batch, self.n_in), np.float32)
+            for j, r in enumerate(batch):
+                images[j] = r.image          # zero-pad to the fixed shape
+            delta = lane.serve(images, k)
+        except Exception as e:
+            # fail the batch, never strand it: requests complete with
+            # .error set, _pending is released, waiters wake. Inline mode
+            # re-raises so the synchronous caller still sees the exception.
+            now = time.perf_counter()
+            with self._cv:
+                for r in batch:
+                    r.error = f"{type(e).__name__}: {e}"
+                    r.lane = lane.lane_id
+                    r.t_done = now
+                    self._complete_locked(r)
+                self._pending -= k
+                self.errors += k
+                self._cv.notify_all()
+            if not self._threads:
+                raise
+            return
+        now = time.perf_counter()
+        with self._cv:
+            for j, r in enumerate(batch):
+                r.label = int(delta["labels"][j])
+                r.steps = int(delta["steps"][j])
+                r.fallback_dense = bool(delta["fallback"][j])
+                r.lane = lane.lane_id
+                r.t_done = now
+                self._complete_locked(r)
+                self._latencies_us.append(r.latency_us)
+            self._pending -= k
+            self.images_out += k
+            self.batches += 1
+            self._batch_fill += k
+            self.accel_s += delta["accel_s"]
+            self.system_s += now - t0
+            self.overflow_fallbacks += delta["overflow_fallbacks"]
+            self.board_cycles += delta.get("board_cycles", 0)
+            self.board_nj += delta.get("board_nj", 0.0)
+            self.board_stalls += delta.get("board_stalls", 0)
+            self._cv.notify_all()
+
+    # ---------------------------------------------------------------- stats
+    def _sample_depth(self) -> None:
+        d = len(self._admission)
+        self._depth_sum += d
+        self._depth_samples += 1
+        self._depth_peak = max(self._depth_peak, d)
+
+    # percentile window: enough to hold any bench run exactly, bounded so a
+    # long-running server cannot leak memory (percentiles become a sliding
+    # window over the most recent requests past this point)
+    LATENCY_WINDOW = 65536
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            self.accel_s = self.system_s = 0.0
+            self.images_out = self.overflow_fallbacks = self.batches = 0
+            self.errors = 0
+            self._abandoned = 0
+            self.board_cycles = 0
+            self.board_nj = 0.0
+            self.board_stalls = 0
+            self._latencies_us: collections.deque[float] = collections.deque(
+                maxlen=self.LATENCY_WINDOW)
+            self._batch_fill = 0
+            self._depth_sum = self._depth_samples = self._depth_peak = 0
+
+    def stats(self) -> dict:
+        with self._lock:
+            n = self.images_out
+            # ONE denominator guard for every per-image rate (board and
+            # accelerator branches used to disagree: `if n` vs `max(1, n)`)
+            per_image = lambda x: x / n if n else 0.0
+            lat = np.asarray(self._latencies_us, np.float64)
+            st = {
+                "spec": self.spec,
+                "workers": self.workers,
+                "max_batch": self.max_batch,
+                "max_wait_us": self.max_wait_us,
+                "accelerator_s": self.accel_s,
+                "system_s": self.system_s,
+                "host_overhead_s": max(0.0, self.system_s - self.accel_s),
+                "images_out": n,
+                "overflow_fallbacks": self.overflow_fallbacks,
+                "errors": self.errors,
+                "abandoned_results": self._abandoned,
+                "batches": self.batches,
+                "accel_us_per_image": per_image(1e6 * self.accel_s),
+                "system_us_per_image": per_image(1e6 * self.system_s),
+                "p50_latency_us":
+                    float(np.percentile(lat, 50)) if lat.size else 0.0,
+                "p95_latency_us":
+                    float(np.percentile(lat, 95)) if lat.size else 0.0,
+                "p99_latency_us":
+                    float(np.percentile(lat, 99)) if lat.size else 0.0,
+                "mean_latency_us": float(np.mean(lat)) if lat.size else 0.0,
+                "queue_depth_mean": (self._depth_sum / self._depth_samples
+                                     if self._depth_samples else 0.0),
+                "queue_depth_peak": self._depth_peak,
+                "batch_fill_mean": (self._batch_fill / self.batches
+                                    if self.batches else 0.0),
+            }
+            if self.family == "board":
+                clock = self.lanes[0].runtime.cost.clock_hz
+                st.update({
+                    "board_cycles": self.board_cycles,
+                    "board_stalls": self.board_stalls,
+                    "board_cycles_per_image": per_image(self.board_cycles),
+                    "board_model_us_per_image":
+                        per_image(1e6 * self.board_cycles / clock),
+                    "board_nj_per_image": per_image(self.board_nj),
+                })
+            return st

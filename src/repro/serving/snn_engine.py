@@ -1,4 +1,11 @@
-"""Batched SNN serving engine — the classifier's request-queue front-end.
+"""Batched SNN serving engine — the synchronous facade over the scheduler.
+
+``SNNServeEngine`` keeps the submit()/flush()/classify() surface but owns no
+serving logic anymore: micro-batching, the overflow→dense reroute, board
+cycle/energy accounting, and every stat (scope split, latency percentiles,
+queue depth) live in ``serving.scheduler.ServingScheduler`` — one code path
+shared with the continuous-batching load bench, so the sync and async tiers
+cannot drift apart.
 
 Mirrors ``ServeEngine``'s measurement discipline (the paper's §2.3 split):
   * accelerator-scope — jitted device execution only (block_until_ready
@@ -10,34 +17,25 @@ Micro-batching pads every chunk to the engine's fixed ``max_batch`` so ONE
 compiled program (the artifact's padded shapes) serves all traffic — no
 recompiles as request counts vary, which is what "serve heavy traffic" needs.
 Rows whose event frames exceed the artifact's calibrated E_max are NOT
-dropped: the engine falls back to the dense time-batched path for exactly
+dropped: the scheduler falls back to the dense time-batched path for exactly
 those rows (the co-design overflow policy — the FPGA would backpressure, we
 reroute), and counts the reroutes in stats.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ttfs
-from repro.core.accelerator import SNNAccelerator
 from repro.core.artifact import Artifact
-from repro.core.events import EventFrames, pack_events_batched
+from repro.serving.scheduler import ServeRequest, ServingScheduler
 
+# back-compat alias: completed requests returned by flush() used to be
+# SNNRequest instances; they are the scheduler's ServeRequest now
+SNNRequest = ServeRequest
 
-@dataclasses.dataclass
-class SNNRequest:
-    rid: int
-    image: np.ndarray            # (N_in,) float in [0, 1]
-    label: int | None = None     # filled by flush()
-    steps: int | None = None     # timesteps consumed (latency mode)
-    fallback_dense: bool = False  # True if served via the dense path
+_BACKEND_SPECS = {"accelerator": "accelerator-event", "board": "board-batched"}
 
 
 class SNNServeEngine:
@@ -47,178 +45,79 @@ class SNNServeEngine:
       * "accelerator" (default) — the packed-event TPU path; ``kernel``
         selects its implementation ("fused" = the event→LIF→decode
         megakernel, the default; "jnp"/"pallas" = the staged pipeline).
-      * "board" — the board-runtime emulator's batched fast path; every
+      * "board" — the board-runtime emulator's batched fast path; ``kernel``
+        selects its LIF implementation ("jnp" default, "pallas"); every
         flush additionally accounts PL cycles and dynamic energy (the
         Table-3 analogue), surfaced in ``stats()``. The board never drops
         overflow events (FIFO backpressure costs cycles instead), so the
         dense reroute path does not apply.
 
+    ``kernel=None`` means the backend's own default; an explicit kernel is
+    forwarded to whichever backend is selected (a board engine asked for
+    "pallas" really runs the Pallas LIF — and one asked for the
+    accelerator-only "fused" fails loudly instead of silently running jnp).
+
     ``latency_mode`` serves with per-row early exit at the first output
-    spike (the paper's TTFS decision latency)."""
+    spike (the paper's TTFS decision latency).
+
+    ``workers=0`` (default) serves synchronously inside flush() — the
+    deterministic facade mode; ``workers>=1`` hands the queue to that many
+    continuous-batching worker lanes (see ``serving.scheduler``)."""
 
     def __init__(self, artifact: Artifact, *, max_batch: int = 64,
-                 kernel: str = "fused", latency_mode: bool = False,
-                 backend: str = "accelerator"):
-        if backend not in ("accelerator", "board"):
+                 kernel: str | None = None, latency_mode: bool = False,
+                 backend: str = "accelerator", workers: int = 0,
+                 max_wait_us: float = 2000.0):
+        if backend not in _BACKEND_SPECS:
             raise ValueError(f"unknown backend {backend!r}")
         self.art = artifact
         self.backend = backend
         self.max_batch = int(max_batch)
         self.latency_mode = bool(latency_mode)
-        if backend == "board":
-            from repro.core.runtimes import make_runtime
-            self.accel = make_runtime(artifact, "board",
-                                      latency_mode=latency_mode)
-        else:
-            self.accel = SNNAccelerator(artifact, mode="event", kernel=kernel)
-        self._dense = None                    # built lazily on first overflow
-        self.T = int(artifact.m("encode", "T"))
-        self.x_min = float(artifact.m("encode", "x_min"))
-        self.e_max = int(artifact.m("events", "e_max"))
-        self._queue: list[SNNRequest] = []
-        self._next_rid = 0
-        self.accel_s = 0.0
-        self.system_s = 0.0
-        self.images_out = 0
-        self.overflow_fallbacks = 0
-        self.batches = 0
-        self.board_cycles = 0
-        self.board_nj = 0.0
-        self.board_stalls = 0
+        if kernel is None:
+            kernel = "fused" if backend == "accelerator" else "jnp"
+        self.sched = ServingScheduler(
+            artifact, spec=_BACKEND_SPECS[backend], workers=workers,
+            max_batch=max_batch, max_wait_us=max_wait_us, kernel=kernel,
+            latency_mode=latency_mode)
+        # the facade's runtime (lane 0's) — kept as .accel for back-compat
+        self.accel = self.sched.lanes[0].runtime
+        self._unclaimed: dict[int, ServeRequest] = {}
 
     # ----------------------------------------------------------------- queue
     def submit(self, image: np.ndarray) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
-        self._queue.append(SNNRequest(rid, np.asarray(image, np.float32)))
-        return rid
+        return self.sched.submit(image)
 
     def flush(self) -> dict[int, SNNRequest]:
-        """Serve every queued request; returns {rid: completed request}."""
-        t_sys0 = time.perf_counter()
-        done: dict[int, SNNRequest] = {}
-        q, self._queue = self._queue, []
-        for i in range(0, len(q), self.max_batch):
-            chunk = q[i:i + self.max_batch]
-            self._serve_chunk(chunk)
-            done.update({r.rid: r for r in chunk})
-        self.system_s += time.perf_counter() - t_sys0
+        """Serve every queued request; returns {rid: completed request} for
+        ALL completed-but-unclaimed requests — including ones submitted by
+        earlier callers whose results a classify() batch completed but did
+        not claim."""
+        done = self._unclaimed
+        self._unclaimed = {}
+        done.update(self.sched.drain())
         return done
 
     def classify(self, images: Sequence[np.ndarray] | np.ndarray
                  ) -> np.ndarray:
-        """Convenience batch API: images (B, N_in) -> labels (B,) int32."""
+        """Convenience batch API: images (B, N_in) -> labels (B,) int32.
+
+        Claims ONLY its own requests; anything else completed by the flush
+        is preserved for the submitting caller's next flush()."""
         rids = [self.submit(img) for img in np.asarray(images, np.float32)]
         done = self.flush()
-        return np.asarray([done[r].label for r in rids], np.int32)
+        out = [done.pop(r) for r in rids]
+        self._unclaimed.update(done)
+        return np.asarray([r.label for r in out], np.int32)
 
-    # ------------------------------------------------------------ micro-batch
-    def _pack(self, images: np.ndarray) -> EventFrames:
-        """Host-side encode + spike packing (system-scope work, the paper's
-        Fig-2 'spike packing' stage)."""
-        times = np.asarray(ttfs.encode_ttfs(
-            jnp.asarray(images, jnp.float32), self.T, self.x_min))
-        return pack_events_batched(times, self.T, self.e_max)
-
-    def _serve_chunk(self, chunk: list[SNNRequest]) -> None:
-        k = len(chunk)
-        images = np.zeros((self.max_batch, chunk[0].image.shape[-1]),
-                          np.float32)
-        for j, r in enumerate(chunk):
-            images[j] = r.image                 # zero-pad to the fixed shape
-        if self.backend == "board":
-            self._serve_chunk_board(chunk, images)
-            return
-        frames = self._pack(images)
-        overflow = np.asarray(frames.overflow)  # checked ONCE, on host arrays
-
-        t0 = time.perf_counter()
-        out = self.accel.forward(frames=frames,
-                                 latency_mode=self.latency_mode,
-                                 check_overflow=False)
-        jax.block_until_ready(out.labels)
-        self.accel_s += time.perf_counter() - t0
-        labels = np.array(out.labels)           # writable copies (fallback
-        steps = np.array(out.steps)             # rows are patched below)
-        self.batches += 1
-
-        bad = np.nonzero(overflow[:k])[0]
-        if bad.size:
-            # overflow policy: reroute those rows through the dense
-            # time-batched path (same artifact, same semantics, no E_max
-            # cap). Runs on the full fixed-shape padded buffer so the dense
-            # program compiles once, not per distinct overflow-row count.
-            if self._dense is None:
-                self._dense = SNNAccelerator(self.art, mode="batch",
-                                             kernel="jnp")
-            t0 = time.perf_counter()
-            dense_out = self._dense.forward(images=images)
-            jax.block_until_ready(dense_out.labels)
-            self.accel_s += time.perf_counter() - t0
-            labels[bad] = np.asarray(dense_out.labels)[bad]
-            steps[bad] = np.asarray(dense_out.steps)[bad]
-            self.overflow_fallbacks += int(bad.size)
-
-        for j, r in enumerate(chunk):
-            r.label = int(labels[j])
-            r.steps = int(steps[j])
-            r.fallback_dense = bool(overflow[j])
-        self.images_out += k
-
-    def _serve_chunk_board(self, chunk: list[SNNRequest],
-                           images: np.ndarray) -> None:
-        """Board-emulator backend: one batched emulator run per chunk, with
-        the PL cycle/energy account accumulated over the REAL rows only
-        (pad rows clock too, but they are not served traffic)."""
-        k = len(chunk)
-        t0 = time.perf_counter()
-        out = self.accel.forward(images)
-        jax.block_until_ready(out.labels)
-        self.accel_s += time.perf_counter() - t0
-        labels = np.asarray(out.labels)
-        steps = np.asarray(out.steps)
-        tr = self.accel.last_trace
-        self.board_cycles += int(np.sum(tr.cycles[:k]))
-        self.board_nj += float(np.sum(tr.energy_nj[:k]))
-        self.board_stalls += int(np.sum(tr.stalls[:k]))
-        self.batches += 1
-        for j, r in enumerate(chunk):
-            r.label = int(labels[j])
-            r.steps = int(steps[j])
-        self.images_out += k
+    def close(self) -> None:
+        self.sched.close()
 
     # ----------------------------------------------------------------- stats
     def reset_stats(self) -> None:
         """Zero the counters (e.g. after a warmup pass, so compile time does
         not pollute the measured trajectory)."""
-        self.accel_s = self.system_s = 0.0
-        self.images_out = self.overflow_fallbacks = self.batches = 0
-        self.board_cycles = 0
-        self.board_nj = 0.0
-        self.board_stalls = 0
+        self.sched.reset_stats()
 
     def stats(self) -> dict:
-        st = {
-            "backend": self.backend,
-            "accelerator_s": self.accel_s,
-            "system_s": self.system_s,
-            "host_overhead_s": max(0.0, self.system_s - self.accel_s),
-            "images_out": self.images_out,
-            "overflow_fallbacks": self.overflow_fallbacks,
-            "batches": self.batches,
-            "accel_us_per_image": (1e6 * self.accel_s / self.images_out
-                                   if self.images_out else 0.0),
-            "system_us_per_image": (1e6 * self.system_s / self.images_out
-                                    if self.images_out else 0.0),
-        }
-        if self.backend == "board":
-            n = max(1, self.images_out)
-            clock = self.accel.cost.clock_hz
-            st.update({
-                "board_cycles": self.board_cycles,
-                "board_stalls": self.board_stalls,
-                "board_cycles_per_image": self.board_cycles / n,
-                "board_model_us_per_image": 1e6 * self.board_cycles / n / clock,
-                "board_nj_per_image": self.board_nj / n,
-            })
-        return st
+        return {"backend": self.backend, **self.sched.stats()}

@@ -94,3 +94,62 @@ def test_calibrate_e_max_lane_aligned():
     assert e % 128 == 0
     peak = max(int((times == t).sum(1).max()) for t in range(16))
     assert e >= peak
+
+
+# ----------------------------------------- packer equivalence, adversarial
+def _assert_packers_identical(times: np.ndarray, T: int, e_max: int) -> None:
+    """ids, count AND overflow must match elementwise — not just as sets:
+    the serving tier relies on deterministic (time, id)-ordered packing."""
+    a = events.pack_events(times, T, e_max)
+    b = events.pack_events_batched(times, T, e_max)
+    assert np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    assert np.array_equal(np.asarray(a.count), np.asarray(b.count))
+    assert np.array_equal(np.asarray(a.overflow), np.asarray(b.overflow))
+
+
+def test_packers_identical_all_spikes_one_timestep():
+    """Every input lands in a single step — first, last, and an interior
+    one — at 3x the buffer depth, so truncation order matters."""
+    T, e_max, N = 6, 16, 48
+    for t in (0, T // 2, T - 1):
+        times = np.full((3, N), t, np.int32)
+        _assert_packers_identical(times, T, e_max)
+
+
+def test_packers_identical_exact_emax_boundary():
+    """Rows straddling the buffer boundary: e_max-1, e_max, and e_max+1
+    events in one step (only the last may overflow)."""
+    T, e_max = 4, 8
+    for n_ev in (e_max - 1, e_max, e_max + 1):
+        times = np.full((1, e_max + 4), T, np.int32)   # never-spike filler
+        times[0, :n_ev] = 1
+        _assert_packers_identical(times, T, e_max)
+
+
+def test_packers_identical_all_never_spike_rows():
+    """Rows of pure sentinel (time == T) mixed with live rows: no events,
+    no counts, no overflow — and no contamination of neighbours."""
+    T, e_max = 5, 8
+    times = np.full((4, 20), T, np.int32)
+    times[2, :5] = np.arange(5) % T                    # one live row
+    _assert_packers_identical(times, T, e_max)
+    frames = events.pack_events_batched(times, T, e_max)
+    assert int(np.asarray(frames.count)[0].sum()) == 0
+    assert np.all(np.asarray(frames.ids)[0] == events.PAD)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_packers_identical_tie_heavy_property(seed):
+    """Property sweep biased toward ties: times drawn from a tiny palette
+    {0, 1, T-1, T} so nearly every event collides with many others, with a
+    deliberately small e_max so overflow is common."""
+    rng = np.random.RandomState(seed % 2**32)
+    B, N, T, e_max = 3, 40, 7, 8
+    palette = np.array([0, 1, T - 1, T], np.int32)
+    times = palette[rng.randint(0, len(palette), (B, N))]
+    # sprinkle a few uniform times so steps besides the palette are hit too
+    mask = rng.rand(B, N) < 0.2
+    times = np.where(mask, rng.randint(0, T + 1, (B, N)), times)
+    times = times.astype(np.int32)
+    _assert_packers_identical(times, T, e_max)

@@ -6,7 +6,7 @@ import pytest
 from repro.board import SNNBoard, SNNBoardBatched
 from repro.core.accelerator import SNNAccelerator
 from repro.core.reference import SNNReference
-from repro.core.runtimes import available, make_runtime
+from repro.core.runtimes import ADVERTISED_SPECS, available, make_runtime
 
 
 def test_available_families():
@@ -32,6 +32,39 @@ def test_spec_construction(trained_artifact):
     assert make_runtime(art, "board", kernel="pallas").kernel == "pallas"
     with pytest.raises(ValueError, match="accelerator-family"):
         make_runtime(art, "board", kernel="fused")
+
+
+@pytest.mark.parametrize("spec", ADVERTISED_SPECS)
+def test_every_advertised_spec_constructs(trained_artifact, spec):
+    """The grammar roundtrip: every spec the module docstring advertises
+    constructs, and the suffix really selects mode/kernel (board-batched-
+    pallas used to raise `unknown board option 'batched-pallas'`)."""
+    art, _, _ = trained_artifact
+    rt = make_runtime(art, spec)
+    parts = spec.split("-")
+    if spec == "reference":
+        assert isinstance(rt, SNNReference)
+    elif spec == "board-py":
+        assert isinstance(rt, SNNBoard)
+    elif parts[0] == "board":
+        assert isinstance(rt, SNNBoardBatched)
+        assert rt.kernel == (parts[2] if len(parts) == 3 else "jnp")
+    else:
+        assert isinstance(rt, SNNAccelerator)
+        assert rt.mode == parts[1]
+        assert rt.kernel == (parts[2] if len(parts) == 3 else "jnp")
+
+
+def test_board_kernel_suffix_parses_uniformly(trained_artifact):
+    art, _, _ = trained_artifact
+    assert make_runtime(art, "board-batched-pallas").kernel == "pallas"
+    # explicit suffix beats the harness-level keyword default
+    assert make_runtime(art, "board-batched-pallas", kernel="jnp").kernel \
+        == "pallas"
+    with pytest.raises(ValueError, match="no kernel suffix"):
+        make_runtime(art, "board-py-pallas")
+    with pytest.raises(ValueError, match="accelerator-family"):
+        make_runtime(art, "board-batched-fused")
 
 
 def test_unknown_specs_fail_loudly(trained_artifact):

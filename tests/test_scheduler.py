@@ -1,0 +1,206 @@
+"""Continuous-batching scheduler: batch formation (size and deadline close),
+worker lanes, latency percentiles, result()/drain() APIs, and the
+single-code-path overflow reroute / board accounting."""
+
+import copy
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.artifact import Artifact
+from repro.core.reference import SNNReference
+from repro.serving.scheduler import ServingScheduler
+
+
+def _tiny_emax_artifact(art: Artifact, e_max: int = 8) -> Artifact:
+    clone = Artifact(copy.deepcopy(art.meta), dict(art.arrays))
+    clone.meta["events"]["e_max"] = e_max
+    return clone
+
+
+def test_inline_mode_greedy_deterministic_batches(trained_artifact):
+    art, _, (xte, _) = trained_artifact
+    s = ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                         max_batch=4)
+    rids = [s.submit(x) for x in xte[:10]]
+    done = s.drain()
+    assert sorted(done) == rids
+    st = s.stats()
+    assert st["batches"] == 3 and st["images_out"] == 10   # 4 + 4 + 2
+    assert st["batch_fill_mean"] == pytest.approx(10 / 3)
+    assert st["system_s"] >= st["accelerator_s"] > 0
+    assert s.drain() == {}                                 # queue drained
+
+
+def test_threaded_lanes_bitexact_with_reference(trained_artifact):
+    """Labels served through 2 continuous-batching lanes (whatever batches
+    form) are bit-exact with the reference — padding and batch composition
+    must not change an answer."""
+    art, _, (xte, _) = trained_artifact
+    want = np.asarray(SNNReference(art).forward(xte[:48]).labels)
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=2, max_batch=8, max_wait_us=500.0) as s:
+        rids = [s.submit(x) for x in xte[:48]]
+        done = s.drain()
+        got = np.asarray([done[r].label for r in rids])
+        assert np.array_equal(got, want)
+        assert {done[r].lane for r in rids} <= {0, 1}
+        st = s.stats()
+        assert (0 < st["p50_latency_us"] <= st["p95_latency_us"]
+                <= st["p99_latency_us"])
+        assert st["queue_depth_peak"] >= 0
+        assert st["images_out"] == 48
+
+
+def test_deadline_closes_partial_batch(trained_artifact):
+    """Under light load a batch must close at max_wait_us, not wait for
+    max_batch requests that will never come."""
+    art, _, (xte, _) = trained_artifact
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=1, max_batch=64, max_wait_us=1000.0) as s:
+        req = s.result(s.submit(xte[0]), timeout=120.0)
+        assert req.label is not None and req.lane == 0
+        st = s.stats()
+        assert st["batches"] == 1
+        assert st["batch_fill_mean"] <= 2                  # closed near-empty
+
+
+def test_closed_loop_result_api(trained_artifact):
+    """Concurrent closed-loop clients each block on their own request."""
+    art, _, (xte, _) = trained_artifact
+    want = np.asarray(SNNReference(art).forward(xte[:24]).labels)
+    errs = []
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=2, max_batch=8, max_wait_us=500.0) as s:
+        def client(c):
+            for i in range(c, 24, 3):
+                r = s.result(s.submit(xte[i]), timeout=120.0)
+                if r.label != want[i]:
+                    errs.append((i, r.label))
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errs == []
+        assert s.stats()["images_out"] == 24
+    with pytest.raises(RuntimeError, match="closed"):
+        s.submit(xte[0])
+
+
+def test_overflow_reroute_lives_in_scheduler(trained_artifact):
+    """The overflow→dense reroute is scheduler-side: rows beyond E_max are
+    served through the dense path in ANY mode, labels still exact."""
+    art, _, (xte, _) = trained_artifact
+    tiny = _tiny_emax_artifact(art, e_max=8)
+    want = np.asarray(SNNReference(art).forward(xte[:24]).labels)
+    with ServingScheduler(tiny, spec="accelerator-event", kernel="fused",
+                          workers=1, max_batch=8, max_wait_us=500.0) as s:
+        rids = [s.submit(x) for x in xte[:24]]
+        done = s.drain()
+        got = np.asarray([done[r].label for r in rids])
+        assert np.array_equal(got, want)
+        st = s.stats()
+        assert st["overflow_fallbacks"] > 0
+        assert any(done[r].fallback_dense for r in rids)
+
+
+def test_board_accounting_and_denominators(trained_artifact):
+    art, _, (xte, _) = trained_artifact
+    s = ServingScheduler(art, spec="board-batched", max_batch=16)
+    # empty stats: every per-image rate uses the SAME zero-traffic guard
+    st0 = s.stats()
+    assert st0["accel_us_per_image"] == 0.0
+    assert st0["board_model_us_per_image"] == 0.0
+    assert st0["board_nj_per_image"] == 0.0
+    rids = [s.submit(x) for x in xte[:20]]
+    done = s.drain()
+    want = np.asarray(SNNReference(art).forward(xte[:20]).labels)
+    assert np.array_equal(np.asarray([done[r].label for r in rids]), want)
+    st = s.stats()
+    assert st["board_cycles"] > 0 and st["board_nj_per_image"] > 0
+    clock = s.lanes[0].runtime.cost.clock_hz
+    assert st["board_model_us_per_image"] == pytest.approx(
+        1e6 * st["board_cycles_per_image"] / clock)
+    assert st["overflow_fallbacks"] == 0   # board backpressures, never drops
+
+
+def test_failed_batch_never_strands_waiters(trained_artifact):
+    """A serving failure must complete the batch with .error set and release
+    _pending — drain()/result() must not hang, and later traffic must still
+    be served. Inline mode re-raises to the synchronous caller."""
+    art, _, (xte, _) = trained_artifact
+    bad = np.zeros(3, np.float32)              # wrong width: (3,) vs (N_in,)
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=1, max_batch=4, max_wait_us=500.0) as s:
+        rid = s.submit(bad)
+        req = s.result(rid, timeout=120.0)     # completes instead of hanging
+        assert req.error is not None and req.label is None
+        assert s.stats()["errors"] == 1
+        ok = s.result(s.submit(xte[0]), timeout=120.0)   # lane survived
+        assert ok.error is None and ok.label is not None
+
+    s2 = ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          max_batch=4)
+    s2.submit(bad)
+    with pytest.raises(ValueError):            # inline mode surfaces it
+        s2.drain()
+    assert s2.drain() != {} or s2.stats()["errors"] == 1   # nothing stranded
+
+
+def test_drain_does_not_steal_claimed_result(trained_artifact):
+    """A rid a result() caller is blocked on must not be swept up by a
+    concurrent drain() — the claim protects it."""
+    art, _, (xte, _) = trained_artifact
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=1, max_batch=4, max_wait_us=500.0) as s:
+        got = {}
+        rid = s.submit(xte[0])
+        t = threading.Thread(
+            target=lambda: got.update(r=s.result(rid, timeout=120.0)))
+        t.start()
+        deadline = time.time() + 30
+        while rid not in s._claims:            # wait for the claim to land
+            assert time.time() < deadline
+            time.sleep(0.001)
+        drained = s.drain()
+        t.join(timeout=120.0)
+        assert not t.is_alive()
+        assert got["r"].rid == rid and got["r"].label is not None
+        assert rid not in drained
+
+
+def test_close_fails_backlog_instead_of_draining_it(trained_artifact):
+    """close() finishes the batch in flight but does NOT serve the backlog:
+    unserved requests complete with error='scheduler closed'."""
+    art, _, (xte, _) = trained_artifact
+    s = ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                         workers=1, max_batch=4, max_wait_us=10_000_000.0)
+    rids = [s.submit(x) for x in xte[:64]]     # far more than one batch
+    s.close()
+    done = s.drain()
+    assert sorted(done) == rids
+    failed = [r for r in done.values() if r.error == "scheduler closed"]
+    served = [r for r in done.values() if r.error is None]
+    assert len(failed) + len(served) == 64 and failed
+
+
+def test_result_unknown_or_already_claimed_rid_raises(trained_artifact):
+    """result() on a rid that is neither outstanding nor completed fails
+    loudly (KeyError) instead of blocking forever — the already-drained /
+    already-returned / never-submitted cases."""
+    art, _, (xte, _) = trained_artifact
+    s = ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                         max_batch=4)
+    with pytest.raises(KeyError):
+        s.result(999)                          # never submitted
+    rid = s.result(s.submit(xte[0]), timeout=120.0).rid
+    with pytest.raises(KeyError):
+        s.result(rid)                          # already returned
+    rid2 = s.submit(xte[1])
+    s.drain()
+    with pytest.raises(KeyError):
+        s.result(rid2)                         # swept by a drain()

@@ -77,6 +77,59 @@ def test_engine_overflow_falls_back_to_dense(trained_artifact):
     assert done_flags == []                        # queue drained
 
 
+def test_engine_board_backend_honors_kernel(trained_artifact):
+    """backend="board" used to silently drop kernel= (a requested Pallas
+    board path quietly ran jnp); the requested kernel must be the one
+    constructed — and an impossible one must fail loudly."""
+    art, _, _ = trained_artifact
+    assert SNNServeEngine(art, backend="board").accel.kernel == "jnp"
+    eng = SNNServeEngine(art, backend="board", kernel="pallas")
+    assert eng.accel.kernel == "pallas"
+    with pytest.raises(ValueError, match="accelerator-family"):
+        SNNServeEngine(art, backend="board", kernel="fused")
+    # accelerator backend: kernel=None means its own default, "fused"
+    assert SNNServeEngine(art).accel.kernel == "fused"
+    assert SNNServeEngine(art, kernel="jnp").accel.kernel == "jnp"
+
+
+def test_classify_preserves_unclaimed_submits(trained_artifact):
+    """classify() drains the whole queue but must NOT discard results of
+    requests submit()ed earlier by other callers — they stay claimable by
+    the next flush()."""
+    art, _, (xte, _) = trained_artifact
+    ref = SNNReference(art)
+    eng = SNNServeEngine(art, max_batch=8, kernel="fused")
+    rid_early = eng.submit(xte[0])
+    got = eng.classify(xte[1:5])
+    want = np.asarray(ref.forward(xte[:5]).labels)
+    assert np.array_equal(got, want[1:5])      # classify sees only its own
+    done = eng.flush()                         # earlier submit still claimable
+    assert list(done) == [rid_early]
+    assert done[rid_early].label == want[0]
+    assert eng.flush() == {}                   # claimed exactly once
+
+
+def test_engine_stats_percentiles_and_workers(trained_artifact):
+    """The facade surfaces the scheduler's latency percentiles, and
+    workers>=1 turns on continuous batching behind the same API."""
+    art, _, (xte, _) = trained_artifact
+    eng = SNNServeEngine(art, max_batch=8, kernel="fused")
+    eng.classify(xte[:16])
+    st = eng.stats()
+    assert (0 < st["p50_latency_us"] <= st["p95_latency_us"]
+            <= st["p99_latency_us"])
+    assert st["backend"] == "accelerator" and st["workers"] == 0
+
+    want = np.asarray(SNNReference(art).forward(xte[:16]).labels)
+    eng2 = SNNServeEngine(art, max_batch=8, kernel="fused", workers=2,
+                          max_wait_us=500.0)
+    try:
+        assert np.array_equal(eng2.classify(xte[:16]), want)
+        assert eng2.stats()["workers"] == 2
+    finally:
+        eng2.close()
+
+
 # ------------------------------------------------------- event path edges
 def test_accelerator_overflow_raises_and_opt_out(trained_artifact):
     art, _, (xte, _) = trained_artifact
