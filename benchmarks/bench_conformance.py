@@ -1,0 +1,182 @@
+"""Cross-runtime differential conformance gate — the fuzzing agreement bench.
+
+Generates N random valid deployment artifacts plus adversarial event streams
+(``repro.conformance.fuzz``), runs EVERY advertised runtime spec on each, and
+asserts the full oracle stack (``repro.conformance.oracles``): registry
+consistency, label/first-spike/membrane bit-exactness vs the software
+reference, scheduler<->batched trace equivalence, FIFO never-drops,
+cycle/energy cost-model consistency, and quantization error bounds. Then
+verifies the pinned-seed golden traces under ``tests/golden/``
+(``repro.conformance.golden``) so reference-semantics drift is caught even
+when every runtime drifts together.
+
+    --quick   25 fuzzed artifacts (the check.sh / CI configuration)
+    --check   exit non-zero on ANY oracle failure or golden drift; failing
+              cases are dumped to results/conformance_failures/ (artifact
+              .npz + images + JSON report) so drift is reproducible offline —
+              CI uploads that directory as a workflow artifact
+    --regen   rewrite tests/golden/ instead of checking it (commit the diff)
+
+Emits ``results/bench/conformance.json`` (schema-validated).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import shutil
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common as CM
+from repro.conformance import fuzz_case, golden, run_case
+from repro.core.runtimes import ADVERTISED_SPECS
+
+SEED_BASE = 1000   # disjoint from golden.PINNED_SEEDS
+FAIL_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "conformance_failures")
+
+
+def _dump_failure(case, report) -> str:
+    """Persist a failing fuzzed case so it is reproducible from the seed OR
+    from the dumped artifact alone (CI uploads this directory)."""
+    d = os.path.join(FAIL_DIR, f"seed{case.seed}")
+    os.makedirs(d, exist_ok=True)
+    case.artifact.save(os.path.join(d, "artifact.npz"))
+    np.save(os.path.join(d, "images.npy"), case.images)
+    with open(os.path.join(d, "report.json"), "w") as f:
+        json.dump({"seed": case.seed, "notes": case.notes,
+                   "failures": [dataclasses.asdict(o)
+                                for o in report.failures()]},
+                  f, indent=1, default=str)
+    return d
+
+
+def _dump_golden_drift(diffs) -> str:
+    os.makedirs(FAIL_DIR, exist_ok=True)
+    path = os.path.join(FAIL_DIR, "golden_drift.txt")
+    with open(path, "w") as f:
+        f.write("\n".join(str(d) for d in diffs) + "\n")
+    return path
+
+
+def main(quick: bool = False, check: bool = False, regen: bool = False,
+         cases: int | None = None) -> int:
+    n_cases = cases if cases is not None else (25 if quick else 40)
+    if os.path.isdir(FAIL_DIR):      # stale repros must not mask a green run
+        shutil.rmtree(FAIL_DIR)
+    t0 = time.perf_counter()
+
+    per_spec = {s: {"img": 0, "label_mm": 0, "first_mm": 0, "alias": 0}
+                for s in ADVERTISED_SPECS if s != "reference"}
+    per_oracle: dict[str, list[int]] = {}
+    boundary_hits = failed_cases = 0
+    failures: list[str] = []
+
+    for i in range(n_cases):
+        case = fuzz_case(SEED_BASE + i)
+        report = run_case(case)
+        boundary_hits += int(case.notes["e_max_boundary_hit"])
+        for o in report.outcomes:
+            per_oracle.setdefault(o.oracle, [0, 0])
+            per_oracle[o.oracle][0] += int(o.passed)
+            per_oracle[o.oracle][1] += 1
+            if o.oracle == "differential" and o.spec in per_spec:
+                if "alias" in o.detail:
+                    per_spec[o.spec]["alias"] += 1
+                else:
+                    per_spec[o.spec]["img"] += o.stats.get("img", 0)
+                    per_spec[o.spec]["label_mm"] += o.stats.get("labels", 0)
+                    per_spec[o.spec]["first_mm"] += o.stats.get(
+                        "first_spike", 0)
+        if not report.passed:
+            failed_cases += 1
+            d = _dump_failure(case, report)
+            failures.append(report.summary() + f"\n  repro dumped to {d}")
+
+    # ---- golden traces ---------------------------------------------------
+    if regen:
+        manifest = golden.regen()
+        golden_diffs = []
+        print(f"regenerated {len(manifest['seeds'])} golden snapshots under "
+              f"{golden.GOLDEN_DIR} — commit the diff")
+    else:
+        golden_diffs = golden.check()
+        if golden_diffs:
+            failures.append("golden drift:\n  " +
+                            "\n  ".join(str(d) for d in golden_diffs))
+            _dump_golden_drift(golden_diffs)
+
+    wall = time.perf_counter() - t0
+
+    # ---- emit ------------------------------------------------------------
+    rows = []
+    for spec, st in sorted(per_spec.items()):
+        rows.append({
+            "runtime": spec,
+            "scope": "conformance (differential vs software reference)",
+            "cases": n_cases,
+            "img_checked": st["img"],
+            "alias_credited_cases": st["alias"],
+            "label_mismatch_img": st["label_mm"],
+            "first_spike_mismatch_img": st["first_mm"],
+            "bitexact_pct": 100.0 if (st["label_mm"] + st["first_mm"]) == 0
+            else 100.0 * (1 - (st["label_mm"] + st["first_mm"]) /
+                          max(1, 2 * st["img"])),
+        })
+    for oracle, (npass, ntot) in sorted(per_oracle.items()):
+        rows.append({"stage": f"oracle:{oracle}",
+                     "scope": "conformance (oracle stack)",
+                     "cases": ntot,
+                     "cases_pass_pct": 100.0 * npass / max(1, ntot)})
+    rows.append({"stage": "golden",
+                 "scope": "conformance (golden traces, pinned seeds)",
+                 "seeds": list(golden.PINNED_SEEDS),
+                 "regenerated": bool(regen),
+                 "drift_pct": 0.0 if not golden_diffs else
+                 100.0 * len(golden_diffs) / max(1, len(golden.PINNED_SEEDS))})
+    rows.append({"stage": "fuzzer", "scope": "conformance (generator)",
+                 "cases": n_cases, "seed_base": SEED_BASE,
+                 "e_max_boundary_hit_pct": 100.0 * boundary_hits /
+                 max(1, n_cases),
+                 "wall_s": wall})
+    CM.emit("conformance", rows)
+
+    # ---- report ----------------------------------------------------------
+    print(f"conformance: {n_cases} fuzzed artifacts x "
+          f"{len(ADVERTISED_SPECS)} advertised specs in {wall:.1f}s "
+          f"({boundary_hits} exact-E_max boundary cases)")
+    for oracle, (npass, ntot) in sorted(per_oracle.items()):
+        print(f"  oracle {oracle:<22} {npass}/{ntot} cases")
+    print(f"  golden {'regen' if regen else 'check':<22} "
+          f"{len(golden.PINNED_SEEDS) - len(set(d.seed for d in golden_diffs))}"
+          f"/{len(golden.PINNED_SEEDS)} seeds")
+    for f in failures:
+        print(f"\n{f}", file=sys.stderr)
+    ok = failed_cases == 0 and not golden_diffs
+    print(f"conformance gate: {'OK' if ok else 'FAILED'}")
+
+    if check and not ok:
+        print(f"CHECK FAILED: {failed_cases} fuzzed cases and "
+              f"{len(golden_diffs)} golden arrays disagree — repros under "
+              f"{os.path.normpath(FAIL_DIR)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="25 fuzzed artifacts (the CI configuration)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 on any oracle failure or golden drift")
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite tests/golden/ instead of checking it")
+    ap.add_argument("--cases", type=int, default=None,
+                    help="override the fuzzed-artifact count")
+    a = ap.parse_args()
+    sys.exit(main(quick=a.quick, check=a.check, regen=a.regen, cases=a.cases))

@@ -36,9 +36,10 @@ def main(argv=None) -> None:
                     help="run a single bench (e.g. sparsity)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (bench_board_emu, bench_crossplatform,
-                            bench_event_pipeline, bench_repeatability,
-                            bench_resources, bench_roofline, bench_sparsity,
+    from benchmarks import (bench_board_emu, bench_conformance,
+                            bench_crossplatform, bench_event_pipeline,
+                            bench_repeatability, bench_resources,
+                            bench_roofline, bench_sparsity,
                             bench_system_breakdown)
     suite = [
         ("resources (Table 1)", bench_resources.main),
@@ -48,6 +49,8 @@ def main(argv=None) -> None:
         ("sparsity (Fig 3)", bench_sparsity.main),
         ("repeatability (sec 3.3)", bench_repeatability.main),
         ("event_pipeline (staged vs fused)", bench_event_pipeline.main),
+        ("conformance (fuzzed cross-runtime agreement)",
+         bench_conformance.main),
         ("roofline (LM zoo)", bench_roofline.main),
     ]
     for name, fn in suite:

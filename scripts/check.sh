@@ -11,7 +11,9 @@
 # if the board-runtime emulator disagrees with the software reference /
 # its batched fast path drifts from the per-image scheduler, OR if the
 # continuous-batching serving tier serves a single label that is not
-# bit-exact with the software reference under open/closed-loop load.
+# bit-exact with the software reference under open/closed-loop load, OR if
+# any advertised runtime spec disagrees with the reference on ANY fuzzed
+# artifact / the pinned golden traces drift (conformance gate).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -27,3 +29,4 @@ fi
 python -m benchmarks.bench_event_pipeline --quick --check
 python -m benchmarks.bench_board_emu --quick --check
 python -m benchmarks.bench_serving_load --quick --check
+python -m benchmarks.bench_conformance --quick --check

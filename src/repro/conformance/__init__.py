@@ -1,0 +1,32 @@
+"""Cross-runtime differential conformance suite.
+
+The paper's central claim is semantics preservation: ONE exported artifact,
+and every runtime that consumes it — software reference, accelerator
+(jnp/pallas/fused), board emulator (scheduler/batched) — produces bit-exact
+labels and first-spike times. The repo's agreement harness proves that on the
+single trained MNIST artifact; this package generalizes the claim to *any
+valid artifact*:
+
+  * ``fuzz``    — generates random valid deployment artifacts (topologies,
+    quantization, thresholds, leak shifts, decode metadata) plus adversarial
+    event streams (floods, never-spike rows, exact-E_max boundaries,
+    tie-heavy spike times);
+  * ``oracles`` — runs every advertised runtime spec on the same fuzzed
+    artifact and asserts the full oracle stack (registry consistency,
+    label/first-spike/membrane bit-exactness, scheduler<->batched trace
+    equivalence, FIFO never-drops, cycle/energy cost-model consistency,
+    quantization error bounds);
+  * ``golden``  — pinned-seed golden traces under ``tests/golden/`` with a
+    regeneration CLI, so reference-semantics drift is caught even when every
+    runtime drifts together.
+
+``benchmarks/bench_conformance.py --check`` is the gate wired into
+``scripts/check.sh`` and CI.
+"""
+
+from repro.conformance.fuzz import FuzzedCase, fuzz_case, images_from_times
+from repro.conformance.oracles import ConformanceReport, OracleOutcome, run_case
+from repro.conformance import golden
+
+__all__ = ["FuzzedCase", "fuzz_case", "images_from_times",
+           "ConformanceReport", "OracleOutcome", "run_case", "golden"]

@@ -1,0 +1,170 @@
+"""Golden-trace oracles — pinned-seed reference snapshots under tests/golden/.
+
+The differential oracles catch a runtime drifting from the reference; they
+cannot catch the REFERENCE ITSELF drifting (all runtimes moving together — a
+semantics change in encode/LIF/decode would still be "bit-exact agreement").
+Goldens close that hole: for a pinned seed set, the reference outputs (labels,
+first-spike times, final membranes, steps) and the board cost account
+(cycles, energy, events, stalls) are snapshotted to ``tests/golden/`` and
+committed; ``check()`` regenerates each case from its seed and compares
+array-for-array bit-exactly.
+
+Regeneration (after an INTENTIONAL semantics change):
+
+    PYTHONPATH=src python -m repro.conformance.golden --regen
+    # or: python -m benchmarks.bench_conformance --regen
+
+then commit the updated ``tests/golden/`` files; the diff IS the review
+surface for the semantics change.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.conformance.fuzz import fuzz_case
+from repro.core.runtimes import make_runtime
+
+#: default seed set — disjoint from the bench fuzzer's seed base (1000+)
+PINNED_SEEDS = tuple(range(8))
+
+GOLDEN_DIR = os.path.normpath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "tests", "golden"))
+
+MANIFEST = "manifest.json"
+FORMAT = 1
+
+
+def golden_path(seed: int, dirpath: str = GOLDEN_DIR) -> str:
+    return os.path.join(dirpath, f"conformance_seed{seed}.npz")
+
+
+def compute_golden(seed: int) -> tuple[dict[str, np.ndarray], str]:
+    """Regenerate the golden arrays for one pinned seed. Returns
+    (arrays, artifact_fingerprint)."""
+    case = fuzz_case(seed)
+    ref = make_runtime(case.artifact, "reference")
+    out = ref.forward(case.images)
+    board = make_runtime(case.artifact, "board")
+    board.forward(case.images)
+    tr = board.last_trace
+    arrays = {
+        "times": np.asarray(case.times, np.int32),
+        "labels": np.asarray(out.labels, np.int32),
+        "first_spike": np.asarray(out.first_spike, np.int32),
+        "v_final": np.asarray(out.v_final, np.int32),
+        "steps": np.asarray(out.steps, np.int32),
+        "board_cycles": np.asarray(tr.cycles, np.int64),
+        "board_events": np.asarray(tr.events, np.int64),
+        "board_stalls": np.asarray(tr.stalls, np.int64),
+        "board_energy_nj": np.asarray(tr.energy_nj, np.float64),
+    }
+    return arrays, case.artifact.fingerprint()
+
+
+def regen(seeds=PINNED_SEEDS, dirpath: str = GOLDEN_DIR) -> dict:
+    """(Re)write the golden snapshots + manifest. Returns the manifest."""
+    os.makedirs(dirpath, exist_ok=True)
+    manifest = {"format": FORMAT, "seeds": list(seeds), "fingerprints": {}}
+    for seed in seeds:
+        arrays, fp = compute_golden(seed)
+        np.savez(golden_path(seed, dirpath), **arrays)
+        manifest["fingerprints"][str(seed)] = fp
+    with open(os.path.join(dirpath, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return manifest
+
+
+@dataclasses.dataclass
+class GoldenDiff:
+    seed: int
+    array: str          # which golden array drifted (or "<missing>"/"<meta>")
+    detail: str
+
+    def __str__(self) -> str:
+        return f"seed {self.seed}: {self.array}: {self.detail}"
+
+
+def check(seeds=None, dirpath: str = GOLDEN_DIR) -> list[GoldenDiff]:
+    """Regenerate every pinned seed in memory and compare bit-exactly against
+    the committed snapshots. Returns a list of diffs; empty means no drift."""
+    mpath = os.path.join(dirpath, MANIFEST)
+    if not os.path.exists(mpath):
+        return [GoldenDiff(-1, "<missing>",
+                           f"no golden manifest at {mpath} — run --regen "
+                           f"and commit tests/golden/")]
+    with open(mpath) as f:
+        manifest = json.load(f)
+    if seeds is None:
+        seeds = manifest["seeds"]
+    diffs: list[GoldenDiff] = []
+    for seed in seeds:
+        path = golden_path(seed, dirpath)
+        if not os.path.exists(path):
+            diffs.append(GoldenDiff(seed, "<missing>",
+                                    f"snapshot {path} not found"))
+            continue
+        arrays, fp = compute_golden(seed)
+        want_fp = manifest["fingerprints"].get(str(seed))
+        if want_fp != fp:
+            diffs.append(GoldenDiff(
+                seed, "<meta>",
+                f"artifact fingerprint {fp[:12]}… != manifest "
+                f"{str(want_fp)[:12]}… — the fuzzer or artifact format "
+                f"changed; rerun --regen if intentional"))
+        with np.load(path) as z:
+            stored = {k: z[k] for k in z.files}
+        for name, fresh in arrays.items():
+            if name not in stored:
+                diffs.append(GoldenDiff(seed, name, "absent from snapshot"))
+                continue
+            old = stored[name]
+            if old.shape != fresh.shape or old.dtype != fresh.dtype:
+                diffs.append(GoldenDiff(
+                    seed, name, f"shape/dtype drift: snapshot "
+                    f"{old.dtype}{old.shape} vs fresh {fresh.dtype}{fresh.shape}"))
+            elif not np.array_equal(old, fresh):
+                n = int(np.sum(old != fresh))
+                diffs.append(GoldenDiff(
+                    seed, name, f"{n}/{fresh.size} elements drifted "
+                    f"(e.g. snapshot {old.ravel()[np.argmax((old != fresh).ravel())]} "
+                    f"vs fresh {fresh.ravel()[np.argmax((old != fresh).ravel())]})"))
+        for name in stored:
+            if name not in arrays:
+                diffs.append(GoldenDiff(seed, name,
+                                        "snapshot has an array check no "
+                                        "longer computes"))
+    return diffs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite tests/golden/ from the pinned seeds")
+    ap.add_argument("--seeds", type=int, nargs="*", default=None,
+                    help="override the pinned seed set")
+    ap.add_argument("--dir", default=GOLDEN_DIR,
+                    help="golden directory (default: tests/golden/)")
+    a = ap.parse_args(argv)
+    seeds = tuple(a.seeds) if a.seeds else PINNED_SEEDS
+    if a.regen:
+        manifest = regen(seeds, a.dir)
+        print(f"regenerated {len(manifest['seeds'])} golden snapshots "
+              f"under {a.dir}")
+        return 0
+    diffs = check(None if a.seeds is None else seeds, a.dir)
+    for d in diffs:
+        print(f"GOLDEN DRIFT {d}")
+    print(f"golden check: {'OK' if not diffs else f'{len(diffs)} drifts'}")
+    return 1 if diffs else 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

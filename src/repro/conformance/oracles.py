@@ -1,0 +1,248 @@
+"""The differential oracle stack — every runtime, one fuzzed artifact.
+
+``run_case`` takes a ``FuzzedCase`` and runs EVERY advertised runtime spec on
+the same artifact and adversarial image batch, asserting:
+
+  registry      — ``runtimes.registry_consistency_errors`` is empty: what the
+                  registry advertises constructs, and what constructs is
+                  advertised (both directions);
+  differential  — labels, first-spike times, final membranes AND step counts
+                  are bit-exact against the software reference for every spec
+                  (alias specs must construct an identical runtime config and
+                  are credited without a redundant run);
+  sched-batched — the per-image Python board scheduler and the vectorized
+                  batched fast path agree on outputs AND full cycle/energy
+                  traces, in both full-T and latency mode;
+  fifo          — the AER ingress never drops: per-tick queue counts sum to
+                  the number of valid input spikes, and the batched trace
+                  dispatched exactly that many events per image;
+  cost-model    — the board trace equals an independent re-evaluation of
+                  ``hw.BoardCostModel`` via ``board.energy.account`` from the
+                  AER queue's own counts (cycles, energy, synops, stalls);
+  quant         — ``dequantize(quantize(w))`` honors the round-to-nearest
+                  error bound scale/2 on the artifact's actual weights;
+  events        — the packed frames respect the artifact's calibrated E_max
+                  (no overflow flag on a stream the exporter sized for).
+
+Each oracle yields an ``OracleOutcome``; a ``ConformanceReport`` aggregates
+them and renders a failure summary naming spec, oracle, and mismatch counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.board import SNNBoard
+from repro.board.energy import account
+from repro.board.event_queue import AEREventQueue
+from repro.conformance.fuzz import FuzzedCase
+from repro.core import quant
+from repro.core.events import pack_events_batched
+from repro.core.runtimes import (ADVERTISED_SPECS, make_runtime,
+                                 registry_consistency_errors)
+
+
+@dataclasses.dataclass
+class OracleOutcome:
+    oracle: str
+    spec: str
+    passed: bool
+    detail: str = ""
+    stats: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ConformanceReport:
+    seed: int
+    notes: dict
+    outcomes: list[OracleOutcome]
+
+    @property
+    def passed(self) -> bool:
+        return all(o.passed for o in self.outcomes)
+
+    def failures(self) -> list[OracleOutcome]:
+        return [o for o in self.outcomes if not o.passed]
+
+    def summary(self) -> str:
+        fails = self.failures()
+        head = (f"conformance case seed={self.seed} "
+                f"(n_in={self.notes.get('n_in')} n_out={self.notes.get('n_out')} "
+                f"T={self.notes.get('T')} leak={self.notes.get('leak_shift')} "
+                f"weights={self.notes.get('weight_family')}): "
+                f"{len(self.outcomes) - len(fails)}/{len(self.outcomes)} "
+                f"oracles passed")
+        lines = [head] + [f"  FAIL [{o.oracle}] {o.spec}: {o.detail}"
+                          for o in fails]
+        return "\n".join(lines)
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(x)
+
+
+def _runtime_key(rt) -> tuple:
+    """Config identity of a constructed runtime: two specs mapping to the
+    same key are aliases and must behave identically by construction."""
+    return (type(rt).__name__, getattr(rt, "mode", None),
+            getattr(rt, "kernel", None), getattr(rt, "latency_mode", None))
+
+
+def _diff_outputs(out, ref, fields=("labels", "first_spike", "v_final",
+                                    "steps")) -> tuple[dict, str]:
+    """Per-image mismatch counts between two SNNOutput-likes."""
+    stats, parts = {}, []
+    for f in fields:
+        a, b = _np(getattr(out, f)), _np(getattr(ref, f))
+        if a.shape != b.shape:
+            # a wrong shape means every image is wrong — count it that way
+            # so aggregated mismatch metrics cannot read as bit-exact
+            stats[f] = int(b.shape[0]) if b.ndim else 1
+            parts.append(f"{f} shape {a.shape} vs {b.shape}")
+            continue
+        per_img = (a != b) if a.ndim == 1 else np.any(
+            a.reshape(a.shape[0], -1) != b.reshape(b.shape[0], -1), axis=1)
+        n = int(np.sum(per_img))
+        stats[f] = n
+        if n:
+            parts.append(f"{f} mismatches on {n} images")
+    return stats, "; ".join(parts)
+
+
+def run_case(case: FuzzedCase, specs=ADVERTISED_SPECS,
+             py_slice: int = 5) -> ConformanceReport:
+    """Run the full oracle stack for one fuzzed case. ``py_slice`` bounds the
+    per-image Python scheduler's batch (it is deliberately slow); the fuzzer
+    orders the named adversarial patterns (flood/never/ties/ramp/burst)
+    first, so the default slice covers all of them."""
+    art, images, times = case.artifact, case.images, case.times
+    T = int(art.m("encode", "T"))
+    e_max = int(art.m("events", "e_max"))
+    n_pad = int(art.m("codesign", "n_pad"))
+    B = images.shape[0]
+    py_slice = min(py_slice, B)
+    outcomes: list[OracleOutcome] = []
+
+    # ---- registry: advertised <-> constructible, both directions ---------
+    errs = registry_consistency_errors(art)
+    outcomes.append(OracleOutcome("registry", "*", not errs, "; ".join(errs)))
+
+    # ---- differential: every advertised spec vs the reference ------------
+    ref_rt = make_runtime(art, "reference")
+    out_ref = ref_rt.forward(images)
+    ran: dict[tuple, str] = {_runtime_key(ref_rt): "reference"}
+    board_batched = None
+    for spec in specs:
+        if spec == "reference":
+            continue
+        rt = make_runtime(art, spec)
+        key = _runtime_key(rt)
+        if key in ran:
+            outcomes.append(OracleOutcome(
+                "differential", spec, True,
+                f"alias of {ran[key]!r} (identical runtime config)"))
+            continue
+        ran[key] = spec
+        if isinstance(rt, SNNBoard):   # per-image python scheduler: slice
+            out = rt.forward(images[:py_slice])
+            ref_cmp = type(out_ref)(*(_np(f)[:py_slice] for f in out_ref))
+            n_img = py_slice
+        else:
+            out = rt.forward(images)
+            ref_cmp = out_ref
+            n_img = B
+        stats, detail = _diff_outputs(out, ref_cmp)
+        stats["img"] = n_img
+        outcomes.append(OracleOutcome("differential", spec,
+                                      not detail, detail, stats))
+        if key == ("SNNBoardBatched", None, "jnp", False):
+            board_batched = rt
+
+    # ---- scheduler <-> batched: outputs AND traces, both modes -----------
+    for latency in (False, True):
+        mode = "latency" if latency else "full"
+        py = make_runtime(art, "board-py", latency_mode=latency)
+        bt = make_runtime(art, "board", latency_mode=latency)
+        out_py = py.forward(images[:py_slice])
+        out_bt = bt.forward(images[:py_slice])
+        stats, detail = _diff_outputs(out_bt, out_py)
+        parts = [detail] if detail else []
+        for f in dataclasses.fields(py.last_trace):
+            a = _np(getattr(py.last_trace, f.name))
+            b = _np(getattr(bt.last_trace, f.name))
+            if not np.array_equal(a, b):
+                parts.append(f"trace.{f.name} differs "
+                             f"(py {a.tolist()} vs batched {b.tolist()})")
+        outcomes.append(OracleOutcome(f"sched-batched-{mode}", "board",
+                                      not parts, "; ".join(parts), stats))
+
+    # ---- FIFO never-drops + cost-model consistency -----------------------
+    totals = np.zeros(B, np.int64)
+    stalls = np.zeros(B, np.int64)
+    fifo_errs = []
+    for b in range(B):
+        q = AEREventQueue(times[b], T, e_max)
+        per_tick = q.counts()
+        valid = int(np.sum(times[b] < T))
+        if int(per_tick.sum()) != valid or q.total_events != valid:
+            fifo_errs.append(f"image {b}: queue schedules "
+                             f"{int(per_tick.sum())}/{q.total_events} of "
+                             f"{valid} valid events")
+        totals[b] = valid
+        stalls[b] = int(sum(q.stalls_at(t) for t in range(T)))
+    if board_batched is None:
+        # not among the requested specs: run it here; otherwise the
+        # differential loop's full-batch forward already left last_trace
+        board_batched = make_runtime(art, "board")
+        board_batched.forward(images)
+    tr = board_batched.last_trace
+    if not np.array_equal(_np(tr.events), totals):
+        fifo_errs.append(f"batched trace dispatched {_np(tr.events).tolist()} "
+                         f"events but the AER schedule holds {totals.tolist()}"
+                         " — events were dropped or double-counted")
+    outcomes.append(OracleOutcome("fifo", "board", not fifo_errs,
+                                  "; ".join(fifo_errs)))
+
+    expected = account(totals, np.full(B, T, np.int64), stalls, n_pad,
+                       board_batched.cost)
+    cost_errs = []
+    for f in dataclasses.fields(expected):
+        a, b = _np(getattr(expected, f.name)), _np(getattr(tr, f.name))
+        if not np.array_equal(a, b):
+            cost_errs.append(f"{f.name}: expected {a.tolist()}, "
+                             f"trace has {b.tolist()}")
+    outcomes.append(OracleOutcome("cost-model", "board", not cost_errs,
+                                  "; ".join(cost_errs)))
+
+    # ---- quantization roundtrip bound ------------------------------------
+    scale = float(art.m("quant", "scale"))
+    w_f32, w_int8 = _np(art["w_float"]), _np(art["w_int8"])
+    err = float(np.max(np.abs(quant.dequantize(w_int8, scale) - w_f32))) \
+        if w_f32.size else 0.0
+    bound = scale / 2 + 1e-6
+    q_errs = []
+    if not scale > 0:
+        q_errs.append(f"non-positive scale {scale}")
+    if err > bound:
+        q_errs.append(f"roundtrip error {err:.3e} exceeds scale/2 bound "
+                      f"{bound:.3e}")
+    if int(np.max(np.abs(w_int8.astype(np.int32)))) > quant.INT8_MAX:
+        q_errs.append("int8 weights exceed symmetric range")
+    outcomes.append(OracleOutcome("quant", "*", not q_errs, "; ".join(q_errs),
+                                  {"roundtrip_err": err, "bound": bound}))
+
+    # ---- packed events respect the calibrated E_max ----------------------
+    frames = pack_events_batched(times, T, e_max)
+    n_over = int(np.sum(_np(frames.overflow)))
+    peak = int(np.max(_np(frames.count))) if T else 0
+    outcomes.append(OracleOutcome(
+        "events", "*", n_over == 0,
+        f"{n_over} images overflow the calibrated E_max={e_max}" if n_over
+        else "",
+        {"e_max": e_max, "peak_count": peak,
+         "boundary_hit": int(peak == e_max)}))
+
+    return ConformanceReport(seed=case.seed, notes=case.notes,
+                             outcomes=outcomes)

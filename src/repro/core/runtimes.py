@@ -11,6 +11,7 @@ same way in every family (``opts.partition("-")``), so a spec that the
 docstring advertises always constructs:
 
     reference                      software reference (the oracle)
+    accelerator                    alias of accelerator-batch (family default)
     accelerator-batch[-jnp|pallas] time-batched MXU path
     accelerator-event[-jnp|pallas|fused]
                                    packed-event path (kernel picked via the
@@ -39,6 +40,7 @@ _REGISTRY: dict[str, Callable] = {}
 #: construct against any exported artifact (pinned by the roundtrip test).
 ADVERTISED_SPECS = (
     "reference",
+    "accelerator",
     "accelerator-batch", "accelerator-batch-jnp", "accelerator-batch-pallas",
     "accelerator-event", "accelerator-event-jnp", "accelerator-event-pallas",
     "accelerator-event-fused",
@@ -65,6 +67,63 @@ def make_runtime(artifact: Artifact, spec: str, **kw):
         raise ValueError(f"unknown runtime family {family!r} in spec "
                          f"{spec!r}; available: {available()}")
     return _REGISTRY[family](artifact, opts, **kw)
+
+
+#: near-miss grammar probe set: every way the spec grammar can be (mis)spelled
+#: within the known families/modes/kernels. ``registry_consistency_errors``
+#: walks it to enforce the bidirectional contract — a spec either constructs
+#: AND is advertised, or raises AND is not. (Bare "accelerator" used to
+#: construct silently without being advertised; it is now an advertised
+#: family-default alias, pinned by this probe.)
+PROBE_OPTS = {
+    "reference": ("", "jnp", "bogus"),
+    "accelerator": ("", "batch", "event",
+                    "batch-jnp", "batch-pallas", "batch-fused", "batch-bogus",
+                    "event-jnp", "event-pallas", "event-fused", "event-bogus",
+                    "jnp", "pallas", "fused", "bogus"),
+    "board": ("", "batched", "py",
+              "batched-jnp", "batched-pallas", "batched-fused",
+              "batched-bogus", "py-jnp", "jnp", "pallas", "fused", "bogus"),
+}
+
+
+def probe_specs() -> list[str]:
+    return [family + ("-" + opts if opts else "")
+            for family, all_opts in PROBE_OPTS.items() for opts in all_opts]
+
+
+def registry_consistency_errors(artifact: Artifact) -> list[str]:
+    """The registry's advertise/construct contract, checked both ways:
+
+      1. the families ``available()`` exposes are exactly the families
+         ``ADVERTISED_SPECS`` spells out (a family registered without
+         advertised specs — or advertised without a factory — is an error);
+      2. every advertised spec constructs against ``artifact``;
+      3. no probe-set spec constructs WITHOUT being advertised (a silently
+         accepted spelling is an undocumented runtime, itself a conformance
+         failure).
+
+    Returns a list of human-readable errors; empty means consistent."""
+    errors: list[str] = []
+    adv_families = {s.partition("-")[0] for s in ADVERTISED_SPECS}
+    for fam in sorted(adv_families - set(available())):
+        errors.append(f"family {fam!r} is advertised but not registered")
+    for fam in sorted(set(available()) - adv_families):
+        errors.append(f"family {fam!r} is registered but advertises no spec")
+    for spec in ADVERTISED_SPECS:
+        try:
+            make_runtime(artifact, spec)
+        except Exception as e:  # noqa: BLE001 — any failure is the finding
+            errors.append(f"advertised spec {spec!r} does not construct: {e}")
+    for spec in probe_specs():
+        if spec in ADVERTISED_SPECS:
+            continue  # construction already asserted above
+        try:
+            make_runtime(artifact, spec)
+        except Exception:
+            continue  # rejected and unadvertised: consistent
+        errors.append(f"spec {spec!r} constructs but is not advertised")
+    return errors
 
 
 @register("reference")

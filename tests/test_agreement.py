@@ -3,8 +3,9 @@ agreement over the test set, plus the repeatability protocol (§3.3)."""
 
 import numpy as np
 
+from _fakes import divergent_family
 from repro.core.accelerator import SNNAccelerator
-from repro.core.agreement import full_agreement, repeatability
+from repro.core.agreement import AgreementReport, full_agreement, repeatability
 from repro.core.reference import SNNReference
 
 
@@ -50,6 +51,53 @@ def test_early_exit_labels_match_full_run(trained_artifact):
     assert np.array_equal(np.asarray(full.labels), np.asarray(lat.labels))
     # early exit must never take MORE steps than the window
     assert np.all(np.asarray(lat.steps) <= art.m("encode", "T"))
+
+
+def test_agreement_report_summary_renders_every_field():
+    """summary() is the harness's user-facing evidence — pin its shape for
+    both the exact and the mismatching case without running any runtime."""
+    rep = AgreementReport(
+        n_images=4, runtimes=["reference", "fake-rt"],
+        label_mismatches={"fake-rt": 2}, spike_time_mismatches={"fake-rt": 1},
+        accuracy={"reference": 1.0, "fake-rt": 0.5},
+        exact_match=False, wall_s=0.25)
+    s = rep.summary()
+    assert "agreement over 4 images" in s
+    assert "reference" in s and "fake-rt" in s
+    assert "label_mismatch=2" in s and "spike_time_mismatch=1" in s
+    assert "acc=50.0000%" in s and "EXACT MATCH: False" in s
+
+    ok = AgreementReport(n_images=2, runtimes=["reference"],
+                         label_mismatches={}, spike_time_mismatches={},
+                         accuracy={"reference": 1.0},
+                         exact_match=True, wall_s=0.0)
+    assert "EXACT MATCH: True" in ok.summary()
+
+
+def test_divergent_runtime_reported_not_swallowed(trained_artifact):
+    """A runtime that flips one label and one first-spike time must show up
+    in the report's counts and summary — mismatches are never swallowed."""
+    art, _, (xte, yte) = trained_artifact
+    with divergent_family():
+        rep = full_agreement(art, xte[:32], yte[:32],
+                             runtimes=("divergent",), chunk=32)
+        assert not rep.exact_match
+        assert rep.label_mismatches["divergent"] == 1
+        assert rep.spike_time_mismatches["divergent"] == 1
+        assert "label_mismatch=1" in rep.summary()
+        assert "EXACT MATCH: False" in rep.summary()
+
+
+def test_repeatability_on_fuzzed_artifact():
+    """The §3.3 protocol must hold for ANY valid artifact, not just the
+    trained MNIST one — run it on a conformance-fuzzed artifact."""
+    from repro.conformance import fuzz_case
+    case = fuzz_case(21)
+    labels = np.zeros(len(case.images), np.int64)   # accuracy values arbitrary
+    r = repeatability(case.artifact, case.images, labels, runs=3, chunk=8)
+    assert r["mismatches"] == 0
+    assert r["image_run_pairs"] == 3 * len(case.images)
+    assert len(r["accuracy_per_run"]) == 3 and r["accuracy_stable"]
 
 
 def test_dense_baselines_execute_same_parameters(trained_artifact):

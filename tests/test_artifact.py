@@ -124,6 +124,59 @@ def test_fingerprint_covers_meta(tmp_path):
     assert art.fingerprint() != fp1
 
 
+def test_zero_d_and_empty_arrays_roundtrip(tmp_path):
+    """0-d scalars and 0-length arrays are legal payloads: they hash, save,
+    reload, and verify like any other array (the manifest must not choke on
+    an empty tobytes())."""
+    art = Artifact(meta={"k": 1},
+                   arrays={"scalar": np.array(3.5, np.float32),
+                           "empty2d": np.zeros((0, 5), np.int32),
+                           "empty1d": np.zeros((0,), np.int8)})
+    p = str(tmp_path / "edge.npz")
+    fp = art.save(p)
+    art2 = Artifact.load(p)                     # verify=True path
+    assert art2["scalar"].shape == () and float(art2["scalar"]) == 3.5
+    assert art2["empty2d"].shape == (0, 5) and art2["empty2d"].dtype == np.int32
+    assert art2["empty1d"].shape == (0,)
+    assert art2.fingerprint() == fp
+    # same values under a different shape/dtype must NOT collide: the hash
+    # covers dtype and shape, not just bytes (both serialize to 0 bytes)
+    reshaped = Artifact(meta={"k": 1},
+                        arrays={"scalar": np.array(3.5, np.float32),
+                                "empty2d": np.zeros((5, 0), np.int32),
+                                "empty1d": np.zeros((0,), np.int16)})
+    assert reshaped.fingerprint() != art2.fingerprint()
+
+
+def test_fingerprint_stable_across_save_load_resave(tmp_path):
+    """The fingerprint is a durable identity: save -> load -> fingerprint,
+    and a second save of the loaded artifact, all agree bit-for-bit (the
+    volatile manifest/fingerprint meta keys are excluded from hashing)."""
+    art = _mk()
+    p1, p2 = str(tmp_path / "a.npz"), str(tmp_path / "b.npz")
+    fp1 = art.save(p1)
+    loaded = Artifact.load(p1)
+    assert loaded.fingerprint() == fp1
+    fp2 = loaded.save(p2)
+    assert fp2 == fp1
+    assert Artifact.load(p2).fingerprint() == fp1
+
+
+def test_m_path_lookup_edge_cases():
+    art = _mk()
+    # whole-subtree lookup and the empty path
+    assert art.m("model") == {"n_in": 8, "n_out": 4}
+    assert art.m() is art.meta
+    # descending THROUGH a scalar is a miss, not a crash
+    assert art.m("model", "n_in", "deeper") is None
+    assert art.m("model", "n_in", "deeper", default=7) == 7
+    # missing heads, with and without defaults
+    assert art.m("absent") is None
+    assert art.m("absent", "x", default="fb") == "fb"
+    # present values win over provided defaults
+    assert art.m("model", "n_out", default=99) == 4
+
+
 def test_export_has_all_deployment_fields(trained_artifact):
     art, path, _ = trained_artifact
     # weights, thresholds, connectivity descriptors, decode metadata:

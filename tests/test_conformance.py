@@ -1,0 +1,141 @@
+"""Conformance subsystem: fuzzer validity, oracle stack, golden traces.
+
+The suite must prove two directions: (a) the fuzzer generates valid,
+deterministic artifacts that every advertised runtime spec agrees on, and
+(b) the oracles actually CATCH divergence — a deliberately-wrong runtime and
+tampered goldens must fail loudly, not be swallowed.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from _fakes import divergent_family, registered_family
+from repro.conformance import fuzz_case, golden, run_case
+from repro.conformance.fuzz import images_from_times
+from repro.core import runtimes, ttfs
+from repro.core.artifact import Artifact
+
+
+# ------------------------------------------------------------------ fuzzer
+def test_fuzz_case_deterministic():
+    a, b = fuzz_case(42), fuzz_case(42)
+    assert a.artifact.fingerprint() == b.artifact.fingerprint()
+    assert np.array_equal(a.images, b.images)
+    assert np.array_equal(a.times, b.times)
+    assert fuzz_case(43).artifact.fingerprint() != a.artifact.fingerprint()
+
+
+def test_images_from_times_roundtrip_and_validation():
+    T = 16
+    times = np.array([[0, 5, T - 2, T, T]])
+    imgs = images_from_times(times, T)
+    assert np.array_equal(np.asarray(ttfs.encode_ttfs(imgs, T, 1 / 255)),
+                          times)
+    # t = T-1 is unreachable for any x >= x_min > 0: the inverse refuses it
+    with pytest.raises(ValueError, match=r"T-2"):
+        images_from_times(np.array([[T - 1]]), T)
+    with pytest.raises(ValueError, match="too small"):
+        images_from_times(np.array([[0]]), 3)
+
+
+def test_fuzzed_artifact_is_export_shaped(tmp_path):
+    """A fuzzed artifact carries exactly the arrays/meta deploy.export emits,
+    saves with an intact integrity manifest, and reloads verified."""
+    case = fuzz_case(7)
+    art = case.artifact
+    for k in ("w_float", "w_int8", "thresholds", "group_ids", "w_padded",
+              "thr_padded", "gid_padded", "block_table"):
+        assert k in art.arrays, k
+    n_out = art.m("model", "n_out")
+    assert n_out == art.m("readout", "n_groups") * art.m("readout",
+                                                         "per_group")
+    assert art.m("codesign", "n_pad") % 128 == 0
+    assert art.m("events", "e_max") % 128 == 0
+    assert np.all(art["thr_padded"][n_out:] == np.int32(2**31 - 1))
+    assert np.all(art["gid_padded"][n_out:] == -1)
+    p = str(tmp_path / "fuzzed.npz")
+    fp = art.save(p)
+    assert Artifact.load(p).fingerprint() == fp    # load() verifies integrity
+
+
+def test_adversarial_patterns_present():
+    case = fuzz_case(5)
+    T = case.artifact.m("encode", "T")
+    names = case.notes["patterns"]
+    for p in ("flood", "never", "ties", "ramp", "burst"):
+        assert p in names
+    flood = case.times[names.index("flood")]
+    assert len(np.unique(flood)) == 1 and flood[0] < T   # one tick, all spike
+    assert np.all(case.times[names.index("never")] == T)  # zero events
+
+
+# ------------------------------------------------------------- oracle stack
+@pytest.mark.parametrize("seed", [11, 12])
+def test_oracle_stack_passes_on_fuzzed_cases(seed):
+    rep = run_case(fuzz_case(seed))
+    assert rep.passed, rep.summary()
+    oracles = {o.oracle for o in rep.outcomes}
+    assert {"registry", "differential", "sched-batched-full",
+            "sched-batched-latency", "fifo", "cost-model", "quant",
+            "events"} <= oracles
+
+
+def test_divergent_runtime_is_caught_not_swallowed():
+    with divergent_family():
+        rep = run_case(fuzz_case(3), specs=("divergent",))
+        assert not rep.passed
+        by_oracle = {o.oracle: o for o in rep.failures()}
+        # the registry oracle flags the unadvertised family...
+        assert "divergent" in by_oracle["registry"].detail
+        # ...and the differential oracle reports the mismatch counts
+        diff = by_oracle["differential"]
+        assert diff.spec == "divergent"
+        assert diff.stats["labels"] == 1
+        assert diff.stats["first_spike"] == 1
+        assert "mismatches on 1 images" in diff.detail
+        assert "FAIL [differential] divergent" in rep.summary()
+
+
+# ------------------------------------------------------------------- golden
+def test_committed_goldens_match_pinned_seed():
+    """The committed tests/golden/ snapshots regenerate bit-exactly (one seed
+    here; the bench gate checks the full pinned set)."""
+    assert golden.check(seeds=[0]) == []
+
+
+def test_golden_detects_tamper_and_missing(tmp_path):
+    d = str(tmp_path)
+    golden.regen(seeds=(0, 1), dirpath=d)
+    assert golden.check(dirpath=d) == []
+
+    p = golden.golden_path(1, d)
+    with np.load(p) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    arrays["labels"][0] += 1
+    np.savez(p, **arrays)
+    diffs = golden.check(dirpath=d)
+    assert any(x.seed == 1 and x.array == "labels" for x in diffs), diffs
+
+    os.remove(golden.golden_path(0, d))
+    diffs = golden.check(dirpath=d)
+    assert any(x.seed == 0 and x.array == "<missing>" for x in diffs), diffs
+
+
+def test_golden_missing_manifest_reported(tmp_path):
+    diffs = golden.check(dirpath=str(tmp_path / "nowhere"))
+    assert len(diffs) == 1 and "manifest" in diffs[0].detail
+
+
+# ----------------------------------------------------------------- registry
+def test_registry_consistency_on_fuzzed_artifact():
+    assert runtimes.registry_consistency_errors(fuzz_case(1).artifact) == []
+
+
+def test_registry_consistency_flags_unadvertised_family():
+    """A family registered without an advertised spec is itself a conformance
+    failure (the advertise<->construct contract, both directions)."""
+    with registered_family("ghost", lambda art, opts, **kw: object()):
+        errs = runtimes.registry_consistency_errors(fuzz_case(1).artifact)
+        assert any("ghost" in e and "advertises no spec" in e for e in errs)

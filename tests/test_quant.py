@@ -51,6 +51,36 @@ def test_leak_shift_very_large_tau_saturates():
     assert quant.leak_shift_from_tau(1e12) == 15
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(-24, 24))
+def test_quantize_roundtrip_bound_across_magnitudes(seed, log2_mag):
+    """Property: the scale/2 round-to-nearest bound holds across 48 octaves
+    of weight magnitude (tiny nets, heavy-tailed nets, near-denormal nets),
+    and the int8 range is symmetric (|q| <= 127, no -128)."""
+    rng = np.random.RandomState(seed % 2**32)
+    w = (rng.randn(16, 8) * 2.0 ** log2_mag).astype(np.float32)
+    q, scale = quant.quantize_weights(w)
+    assert scale > 0
+    assert int(np.max(np.abs(q.astype(np.int32)))) <= 127
+    err = float(np.max(np.abs(quant.dequantize(q, scale) - w)))
+    assert err <= scale * (0.5 + 1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 200), st.integers(0, 200))
+def test_leak_shift_monotone_property(i, j):
+    """Property: leak_shift_from_tau is monotone nondecreasing in tau over
+    the whole finite range (longer time constant can never mean a STRONGER
+    realized leak), and every finite shift stays below the no-leak
+    sentinel (31)."""
+    tau_a, tau_b = sorted((2.0 ** (i / 8.0 - 2.0), 2.0 ** (j / 8.0 - 2.0)))
+    s_a, s_b = (quant.leak_shift_from_tau(tau_a),
+                quant.leak_shift_from_tau(tau_b))
+    assert s_a <= s_b
+    assert 1 <= s_a <= 15 and 1 <= s_b <= 15      # finite tau: realizable shift
+    assert s_b <= quant.leak_shift_from_tau(np.inf)  # sentinel dominates
+
+
 def test_leak_shift_tiny_positive_tau_is_strongest_leak():
     """tau -> 0+ gives decay -> 0; the closest realizable decay is
     1 - 2**-1 = 0.5, i.e. shift 1 (the strongest hardware leak)."""
