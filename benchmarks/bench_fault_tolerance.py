@@ -1,0 +1,283 @@
+"""Chaos gate — the fault-injection sweep over the resilient serving tier.
+
+Sweeps seeded fault types x rates from ``repro.faults`` through
+``ServingScheduler`` lanes (static artifact SEUs, membrane upsets, stuck-at
+groups, AER link glitches, forced FIFO depth, host-side lane crash / hang /
+slowdown) and measures what the resilience machinery actually delivers:
+
+  * detection rate   — did the matched detector (checksum / ECC / trace /
+    canary / watchdog / exception path) fire for every injected-fault case;
+  * recovery latency — fault-to-healthy scrub/rebuild time (recovery_ms);
+  * the INVARIANT (the reason the subsystem exists): every admitted request
+    completes with either a label bit-exact to the software reference or an
+    explicit ``.error`` — never a silently wrong answer, never a hang.
+
+``--check`` exits non-zero if any case violates the invariant, misses its
+expected detection/recovery counters, or (for the clean baseline) shows any
+fault activity at all. Violating cases are dumped to
+``results/fault_failures/`` (JSON report per case) so chaos regressions are
+reproducible from the seed. Emits ``results/bench/fault_tolerance.json``
+(schema-validated).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common as CM
+from repro.core.reference import SNNReference
+from repro.faults.plan import FaultPlan
+from repro.serving.scheduler import ServingScheduler
+
+FAIL_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "fault_failures")
+
+#: detection counters, keyed by what fired them — a faulty case "detects"
+#: when at least one of its expected counters is nonzero
+DETECTORS = ("lane_faults", "integrity_failures", "canary_failures",
+             "trace_failures", "ecc_detected", "watchdog_timeouts")
+
+
+def _cases(quick: bool) -> list[dict]:
+    """The sweep: one entry per fault type (plus a rate variant where rates
+    are meaningful), each matched to the detector expected to catch it.
+    ``n``/``mb`` are sized per runtime family — the per-image python board
+    datapath (the only dynamic-fault site) gets small batches."""
+    n_acc = 48 if quick else 96          # accelerator-path traffic per case
+    n_brd = 8 if quick else 16           # board-py traffic per case
+    cases = [
+        # -- baseline: no plan, every fault counter must stay zero ---------
+        dict(name="clean", spec="accelerator-event", kernel="fused",
+             n=n_acc, mb=16, faults=None, faulty=False),
+        # -- static SEU: artifact BRAM image, caught by the checksum -------
+        dict(name="seu_weight", spec="accelerator-event", kernel="fused",
+             n=n_acc, mb=16, faults="seu_weight=4,seed=3",
+             expect={"integrity_failures": 1, "lane_restarts": 1}),
+        dict(name="seu_threshold", spec="accelerator-event", kernel="fused",
+             n=n_acc, mb=16, faults="seu_thr=2,seed=4",
+             expect={"integrity_failures": 1, "lane_restarts": 1}),
+        # -- persistent SEU: scrub cannot clear it -> quarantine + degrade -
+        dict(name="seu_persistent", spec="accelerator-event", kernel="fused",
+             n=n_acc, mb=16,
+             faults={"seu_weight_flips": 4, "persistent": True, "seed": 5},
+             expect={"integrity_failures": 2, "quarantines": 1,
+                     "breaker_degraded": 1},
+             all_fallback=True),
+        # -- membrane SEU: mid-tick upsets, caught by the ECC/parity model -
+        dict(name="membrane_seu", spec="board-py", n=n_brd, mb=4,
+             faults="membrane=0.05,seed=6", verify=True,
+             expect={"ecc_detected": 1, "lane_restarts": 1}),
+        # -- stuck-at groups: a logic fault, caught by the canary probes ---
+        dict(name="stuck_group", spec="board-py", n=n_brd, mb=4,
+             faults="stuck=1,seed=7", canary=True,
+             expect={"canary_failures": 1, "lane_restarts": 1}),
+        # -- AER link glitches x rates: caught by the trace cross-check ----
+        dict(name="aer_drop_2pct", spec="board-py", n=n_brd, mb=4,
+             faults="aer_drop=0.02,seed=8", verify=True,
+             expect={"trace_failures": 1, "lane_restarts": 1}),
+        dict(name="aer_drop_10pct", spec="board-py", n=n_brd, mb=4,
+             faults="aer_drop=0.10,seed=8", verify=True,
+             expect={"trace_failures": 1, "lane_restarts": 1}),
+        dict(name="aer_dup_10pct", spec="board-py", n=n_brd, mb=4,
+             faults="aer_dup=0.10,seed=9", verify=True,
+             expect={"trace_failures": 1, "lane_restarts": 1}),
+        dict(name="aer_reorder_10pct", spec="board-py", n=n_brd, mb=4,
+             faults="aer_reorder=0.10,seed=10", verify=True,
+             expect={"trace_failures": 1, "lane_restarts": 1}),
+        # -- forced FIFO depth: semantically clean backpressure — labels
+        #    must stay bit-exact while the stall cycles land in the account
+        dict(name="fifo_depth_4", spec="board-py", n=n_brd, mb=4,
+             faults="fifo=4,seed=11", verify=True, faulty=False,
+             min_stalls=1),
+        # -- host-side lane faults: exception path / watchdog --------------
+        dict(name="lane_crash", spec="accelerator-event", kernel="fused",
+             n=n_acc, mb=16, faults="crash=0,seed=12",
+             expect={"lane_faults": 1, "requeued": 1, "lane_restarts": 1}),
+        dict(name="lane_hang", spec="accelerator-event", kernel="fused",
+             n=n_acc, mb=16,
+             faults=FaultPlan(seed=13, hang_batches=(0,), hang_s=1.5),
+             watchdog_s=0.3,
+             expect={"watchdog_timeouts": 1, "requeued": 1,
+                     "lane_restarts": 1}),
+        dict(name="lane_slow", spec="accelerator-event", kernel="fused",
+             n=24 if quick else 48, mb=16, faults="slow=0.02,seed=14",
+             faulty=False),
+    ]
+    return cases
+
+
+def _run_case(case: dict, art, pool: np.ndarray, want: np.ndarray) -> dict:
+    """Serve one chaos case end to end; returns the verdict + measurements.
+    The invariant check is strict: every rid must come back, and a request
+    may be wrong ONLY by being explicitly errored."""
+    res = {"backoff_s": 0.002}
+    if case.get("verify"):
+        res["verify"] = True
+    if case.get("watchdog_s"):
+        res["watchdog_s"] = case["watchdog_s"]
+    n = case["n"]
+    t0 = time.perf_counter()
+    sched = ServingScheduler(
+        art, spec=case["spec"], kernel=case.get("kernel"), workers=1,
+        max_batch=case["mb"], max_wait_us=500.0, faults=case["faults"],
+        resilience=res,
+        canary_pool=pool[:32] if case.get("canary") else None)
+    with sched:
+        rids = [sched.submit(pool[i % len(pool)]) for i in range(n)]
+        done = sched.drain()
+        st = sched.stats()
+    wall = time.perf_counter() - t0
+
+    problems: list[str] = []
+    missing = [r for r in rids if r not in done]
+    if missing:
+        problems.append(f"{len(missing)} requests never completed "
+                        f"(rids {missing[:5]})")
+    errored = wrong = fallbacks = 0
+    for i, r in enumerate(rids):
+        req = done.get(r)
+        if req is None:
+            continue
+        if req.error is not None:
+            errored += 1                 # explicit — the invariant allows it
+            continue
+        fallbacks += int(req.fallback_dense)
+        if int(req.label) != int(want[i % len(pool)]):
+            wrong += 1
+    if wrong:
+        problems.append(f"{wrong} SILENTLY WRONG labels — the one outcome "
+                        "the resilience tier must never allow")
+    # every fault in this sweep is recoverable or degradable: nothing may
+    # be given up on
+    if errored:
+        problems.append(f"{errored} requests errored instead of being "
+                        "served post-recovery")
+
+    detected = {k: st[k] for k in DETECTORS if st.get(k)}
+    if case.get("faulty", True):
+        for key, floor in case.get("expect", {}).items():
+            if st.get(key, 0) < floor:
+                problems.append(f"expected {key} >= {floor}, got "
+                                f"{st.get(key, 0)} (detection/recovery "
+                                "machinery did not engage)")
+    elif case["faults"] is None and detected:
+        problems.append(f"clean baseline shows fault activity: {detected}")
+    if case.get("all_fallback") and fallbacks < n - errored:
+        problems.append(f"expected every request on the dense fallback, "
+                        f"got {fallbacks}/{n - errored}")
+    if case.get("min_stalls") and st.get("board_stalls", 0) < case["min_stalls"]:
+        problems.append(f"forced FIFO depth produced no backpressure stalls "
+                        f"(board_stalls={st.get('board_stalls', 0)})")
+
+    plan = FaultPlan.coerce(case["faults"])
+    return {
+        "name": case["name"], "spec": case["spec"],
+        "plan": plan.describe() if plan is not None else "none",
+        "faulty": bool(case.get("faulty", True)),
+        "n": n, "wall_s": wall, "stats": st, "errored": errored,
+        "wrong": wrong, "fallbacks": fallbacks,
+        "detected": bool(detected), "detectors_fired": sorted(detected),
+        "problems": problems,
+    }
+
+
+def _dump_failure(verdict: dict) -> str:
+    os.makedirs(FAIL_DIR, exist_ok=True)
+    path = os.path.join(FAIL_DIR, f"{verdict['name']}.json")
+    with open(path, "w") as f:
+        json.dump(verdict, f, indent=1, default=float)
+    return path
+
+
+def main(quick: bool = False, check: bool = False) -> int:
+    art, xte, yte = CM.get_artifact_and_data(quick=quick)
+    pool = xte[:64]
+    want = np.asarray(SNNReference(art).forward(pool).labels)
+    if os.path.isdir(FAIL_DIR):         # stale repros must not mask a green run
+        shutil.rmtree(FAIL_DIR)
+
+    verdicts = [_run_case(c, art, pool, want) for c in _cases(quick)]
+
+    rows, failures = [], []
+    faulty = [v for v in verdicts if v["faulty"]]
+    for v in verdicts:
+        st = v["stats"]
+        rows.append({
+            "runtime": v["spec"],
+            "config": v["name"],
+            "scope": "resilience (chaos sweep, serving tier)",
+            "fault_plan": v["plan"],
+            "n_img": v["n"],
+            "wall_s": v["wall_s"],
+            "errored_img": v["errored"],
+            "silently_wrong_img": v["wrong"],
+            "fallback_img": v["fallbacks"],
+            "detected": v["detected"],
+            "detectors_fired": v["detectors_fired"],
+            "recovery_ms_mean": st["recovery_ms_mean"],
+            "lane_faults": st["lane_faults"],
+            "requeued": st["requeued"],
+            "lane_restarts": st["lane_restarts"],
+            "quarantines": st["quarantines"],
+            "breaker_degraded": st["breaker_degraded"],
+            "watchdog_timeouts": st["watchdog_timeouts"],
+            "invariant_ok_pct": 0.0 if v["problems"] else 100.0,
+        })
+        if v["problems"]:
+            failures.append(v)
+            _dump_failure(v)
+    det_rate = (100.0 * sum(v["detected"] for v in faulty) / len(faulty)
+                if faulty else 0.0)
+    rows.append({
+        "stage": "summary",
+        "scope": "resilience (chaos sweep, serving tier)",
+        "cases": len(verdicts),
+        "faulty_cases": len(faulty),
+        "detection_rate_pct": det_rate,
+        "invariant_ok_pct": 100.0 * (1 - len(failures) / len(verdicts)),
+        "recovery_ms_mean": float(np.mean([
+            v["stats"]["recovery_ms_mean"] for v in faulty
+            if v["stats"]["recovery_ms_mean"]] or [0.0])),
+    })
+    CM.emit("fault_tolerance", rows)
+
+    for v in verdicts:
+        mark = "ok " if not v["problems"] else "BAD"
+        fired = ",".join(v["detectors_fired"]) or "-"
+        print(f"{mark} {v['name']:<18} {v['spec']:<20} "
+              f"served {v['n'] - v['errored']:>3}/{v['n']}  "
+              f"wrong {v['wrong']}  detectors [{fired}]  "
+              f"recov {v['stats']['recovery_ms_mean']:7.1f} ms  "
+              f"{v['wall_s']:5.1f}s")
+    print(f"chaos gate: {len(verdicts) - len(failures)}/{len(verdicts)} cases "
+          f"hold the invariant; detection {det_rate:.0f}% over "
+          f"{len(faulty)} faulty cases")
+    for v in failures:
+        for p in v["problems"]:
+            print(f"  FAIL [{v['name']}] {p}", file=sys.stderr)
+
+    if check and failures:
+        print(f"CHECK FAILED: {len(failures)} chaos cases violate the "
+              f"detected-or-correct invariant — reports under "
+              f"{os.path.normpath(FAIL_DIR)}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller traffic per case (the CI configuration)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any case violates the detected-or-"
+                         "correct invariant or misses its expected "
+                         "detection/recovery counters")
+    a = ap.parse_args()
+    sys.exit(main(quick=a.quick, check=a.check))

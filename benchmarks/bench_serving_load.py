@@ -34,7 +34,7 @@ import numpy as np
 
 from benchmarks import common as CM
 from repro.core.reference import SNNReference
-from repro.serving.scheduler import ServingScheduler
+from repro.serving.scheduler import ServingError, ServingScheduler
 
 SPECS = ("accelerator-event-fused", "board-batched")
 WORKER_COUNTS = (1, 2)
@@ -71,8 +71,11 @@ def _closed_loop(sched: ServingScheduler, images: np.ndarray,
 
     def client(c: int) -> None:
         for i in range(c, n, clients):
-            req = sched.result(sched.submit(images[i % len(images)]),
-                               timeout=300.0)
+            try:
+                req = sched.result(sched.submit(images[i % len(images)]),
+                                   timeout=300.0)
+            except ServingError as e:
+                req = e.request      # errored requests are reported, not lost
             with lock:
                 results.append((i, req))
 

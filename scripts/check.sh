@@ -13,7 +13,9 @@
 # continuous-batching serving tier serves a single label that is not
 # bit-exact with the software reference under open/closed-loop load, OR if
 # any advertised runtime spec disagrees with the reference on ANY fuzzed
-# artifact / the pinned golden traces drift (conformance gate).
+# artifact / the pinned golden traces drift (conformance gate), OR if any
+# injected-fault chaos case violates the detected-or-correct serving
+# invariant (fault-tolerance gate).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -30,3 +32,4 @@ python -m benchmarks.bench_event_pipeline --quick --check
 python -m benchmarks.bench_board_emu --quick --check
 python -m benchmarks.bench_serving_load --quick --check
 python -m benchmarks.bench_conformance --quick --check
+python -m benchmarks.bench_fault_tolerance --quick --check

@@ -64,6 +64,8 @@ class SNNBoardBatched:
             self.groups_used, cost.lane)
         self._core = jax.jit(self._core_impl)
         self.last_trace: BoardTrace | None = None
+        # per-forward (B, T) dispatch histogram — the trace detector's input
+        self.last_tick_counts: np.ndarray | None = None
 
     # ------------------------------------------------------------ device core
     def _lif_grouped(self, currents: jnp.ndarray, want_history: bool):
@@ -124,6 +126,7 @@ class SNNBoardBatched:
         labels, first_l, v_l, steps = self._core(jnp.asarray(times))
         steps_np = np.asarray(steps, np.int64)
         counts = _step_counts(times, self.T)[:, :self.T].astype(np.int64)
+        self.last_tick_counts = counts
         cum = np.zeros((counts.shape[0], self.T + 1), np.int64)
         np.cumsum(counts, axis=1, out=cum[:, 1:])
         excess = np.maximum(counts - self.depth, 0)

@@ -35,7 +35,7 @@ from repro.core.reference import SNNOutput
 
 class SNNBoard:
     def __init__(self, artifact: Artifact, *, latency_mode: bool = False,
-                 cost: BoardCostModel = PYNQ_COST):
+                 cost: BoardCostModel = PYNQ_COST, faults=None):
         self.art = artifact
         self.cost = cost
         self.latency_mode = bool(latency_mode)
@@ -44,27 +44,60 @@ class SNNBoard:
         self.n_out = int(artifact.m("model", "n_out"))
         self.depth = int(artifact.m("events", "e_max"))
         self.core = GroupedNeuronCore.from_artifact(artifact, cost)
+        self.n_pad = self.core.n_pad
+        # dynamic fault plan (repro.faults.FaultPlan), interpreted per image
+        # by the tick loop; None / a clean plan leaves the datapath bit-exact
+        self.plan = faults
+        self.stuck_groups: list[int] = []
+        if faults is not None and faults.fifo_depth is not None:
+            self.depth = int(faults.fifo_depth)
+        if faults is not None and faults.stuck_groups:
+            from repro.faults.models import apply_stuck
+            self.stuck_groups = apply_stuck(self.core, faults,
+                                            n_out=self.n_out)
         self.last_trace: BoardTrace | None = None
+        # per-forward observability (the trace / ECC detectors read these):
+        # (B, T) events dispatched per tick, (B,) membrane parity hits
+        self.last_tick_counts: np.ndarray | None = None
+        self.last_ecc: np.ndarray | None = None
 
     # ------------------------------------------------------------- one image
-    def run_image(self, times: np.ndarray) -> tuple[np.ndarray, np.ndarray,
-                                                    int, BoardTrace]:
+    def _make_queue(self, times: np.ndarray, image_key: int):
+        if self.plan is not None and self.plan.has_aer_faults:
+            from repro.faults.models import FaultyAEREventQueue
+            return FaultyAEREventQueue(times, self.T, self.depth, self.plan,
+                                       image_key)
+        return AEREventQueue(times, self.T, self.depth)
+
+    def run_image(self, times: np.ndarray, image_key: int = 0
+                  ) -> tuple[np.ndarray, np.ndarray, int, BoardTrace]:
         """times (N_in,) int spike times -> (first (n_pad,), v (n_pad,),
-        ticks_executed, trace)."""
-        queue = AEREventQueue(times, self.T, self.depth)
+        ticks_executed, trace). Also records the per-tick dispatch histogram
+        and membrane-parity hits on ``self`` for the batch front-end."""
+        queue = self._make_queue(times, image_key)
+        upset = None
+        if self.plan is not None and self.plan.seu_membrane_rate:
+            from repro.faults.models import MembraneUpsetInjector
+            upset = MembraneUpsetInjector(self.plan, image_key)
         core = self.core
         core.reset()
         events = stalls = 0
         ticks = self.T
+        tick_counts = np.zeros(self.T, np.int64)
         for t, ids in queue:
             for nid in ids:
                 core.dispatch(int(nid))
+            tick_counts[t] = len(ids)
             events += len(ids)
             stalls += queue.stalls_at(t)
             fired = core.tick(t)
+            if upset is not None:
+                upset.after_tick(core, t)
             if self.latency_mode and fired:
                 ticks = t + 1
                 break
+        self._last_tick_counts_row = tick_counts
+        self._last_ecc_row = upset.ecc_hits if upset is not None else 0
         trace = account(events, ticks, stalls, core.n_pad, self.cost)
         return core.first_flat.copy(), core.v_flat.copy(), ticks, trace
 
@@ -74,12 +107,15 @@ class SNNBoard:
         times = np.asarray(ttfs.encode_ttfs(jnp.asarray(images), self.T,
                                             self.x_min))
         firsts, vs, steps, traces = [], [], [], []
-        for row in times:
-            first, v, ticks, trace = self.run_image(row)
+        tick_counts, eccs = [], []
+        for key, row in enumerate(times):
+            first, v, ticks, trace = self.run_image(row, image_key=key)
             firsts.append(first[:self.n_out])
             vs.append(v[:self.n_out])
             steps.append(ticks)
             traces.append(trace)
+            tick_counts.append(self._last_tick_counts_row)
+            eccs.append(self._last_ecc_row)
         first_l = np.stack(firsts)
         v_l = np.stack(vs)
         labels = np.asarray(ttfs.decode_labels(
@@ -88,6 +124,8 @@ class SNNBoard:
             per_group=self.art.m("readout", "per_group"),
             sentinel=self.T, fallback=self.art.m("readout", "fallback")))
         self.last_trace = stack_traces(traces)
+        self.last_tick_counts = np.stack(tick_counts)
+        self.last_ecc = np.asarray(eccs, np.int64)
         return SNNOutput(labels=labels, first_spike=first_l, v_final=v_l,
                          steps=np.asarray(steps, np.int32))
 

@@ -22,7 +22,10 @@ the same artifact and adversarial image batch, asserting:
   quant         — ``dequantize(quantize(w))`` honors the round-to-nearest
                   error bound scale/2 on the artifact's actual weights;
   events        — the packed frames respect the artifact's calibrated E_max
-                  (no overflow flag on a stream the exporter sized for).
+                  (no overflow flag on a stream the exporter sized for);
+  fault-recovery— the serving tier survives one seeded recoverable lane
+                  crash: every request completes with a reference-bit-exact
+                  label and the detection/requeue/restart counters agree.
 
 Each oracle yields an ``OracleOutcome``; a ``ConformanceReport`` aggregates
 them and renders a failure summary naming spec, oracle, and mismatch counts.
@@ -244,5 +247,63 @@ def run_case(case: FuzzedCase, specs=ADVERTISED_SPECS,
         {"e_max": e_max, "peak_count": peak,
          "boundary_hit": int(peak == e_max)}))
 
+    # ---- fault recovery: serve through one seeded recoverable fault ------
+    outcomes.append(_fault_recovery_oracle(case, out_ref))
+
     return ConformanceReport(seed=case.seed, notes=case.notes,
                              outcomes=outcomes)
+
+
+def _fault_recovery_oracle(case: FuzzedCase, out_ref) -> OracleOutcome:
+    """Chaos conformance: serve the fuzzed images through a scheduler whose
+    single lane crashes on its first batch (seeded, recoverable). The
+    resilience tier must detect the fault, requeue the batch, scrub/rebuild
+    the lane, and serve EVERY request with a label bit-exact to the
+    reference — and the recovery ledger must show it happened."""
+    from repro.faults.plan import FaultPlan
+    from repro.serving.scheduler import ServingScheduler
+
+    images = case.images
+    B = images.shape[0]
+    plan = FaultPlan(seed=case.seed, crash_batches=(0,))
+    errs: list[str] = []
+    st: dict = {}
+    try:
+        with ServingScheduler(case.artifact, spec="reference", workers=1,
+                              max_batch=min(B, 8), max_wait_us=500.0,
+                              faults=plan,
+                              resilience={"backoff_s": 0.001}) as s:
+            rids = [s.submit(img) for img in images]
+            done = s.drain()
+            st = s.stats()
+        failed = [(r, done[r].error) for r in rids
+                  if done[r].error is not None]
+        if failed:
+            errs.append(f"{len(failed)} requests errored after a recoverable "
+                        f"fault (first: rid {failed[0][0]}: {failed[0][1]})")
+        else:
+            got = np.asarray([done[r].label for r in rids])
+            want = _np(out_ref.labels)
+            n_mm = int(np.sum(got != want))
+            if n_mm:
+                errs.append(f"post-recovery labels mismatch reference on "
+                            f"{n_mm}/{B} images")
+        if st.get("lane_faults", 0) < 1:
+            errs.append("injected lane crash was never detected "
+                        "(lane_faults == 0)")
+        if st.get("requeued", 0) < 1:
+            errs.append("crashed batch was not requeued (requeued == 0)")
+        if st.get("lane_restarts", 0) < 1:
+            errs.append("lane was never rebuilt (lane_restarts == 0)")
+        if st.get("errors", 0):
+            errs.append(f"{st['errors']} requests gave up despite a "
+                        "one-shot recoverable fault")
+        if st.get("images_out", 0) != B:
+            errs.append(f"served {st.get('images_out', 0)}/{B} images")
+    except Exception as e:  # noqa: BLE001 — a hang/crash IS the failure mode
+        errs.append(f"serving through the fault raised "
+                    f"{type(e).__name__}: {e}")
+    return OracleOutcome(
+        "fault-recovery", "serving", not errs, "; ".join(errs),
+        {k: st.get(k, 0) for k in ("lane_faults", "requeued",
+                                   "lane_restarts", "recoveries")})

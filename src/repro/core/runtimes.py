@@ -60,12 +60,40 @@ def available() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def make_runtime(artifact: Artifact, spec: str, **kw):
-    """Build the runtime named by ``spec`` over ``artifact``."""
+def make_runtime(artifact: Artifact, spec: str, *, faults=None, **kw):
+    """Build the runtime named by ``spec`` over ``artifact``.
+
+    ``faults`` accepts anything ``repro.faults.FaultPlan.coerce`` does
+    (None | plan | spec string like ``"seu_weight=4,seed=7"`` | kwargs dict):
+
+      * a STATIC plan (artifact-resident SEU bit flips) corrupts an in-memory
+        CLONE of the artifact for any runtime family — the caller's artifact
+        stays pristine (it backs the scrub/reload recovery path) and the
+        clone's unchanged SHA-256 manifest is the detector;
+      * a DYNAMIC plan (board-datapath faults: membrane SEU, stuck groups,
+        AER glitches, forced FIFO depth) is only emulated by the per-image
+        ``board-py`` scheduler; every other spec rejects it loudly rather
+        than silently serving the clean datapath;
+      * lane-fault fields are the serving scheduler's concern and are
+        ignored here.
+    """
     family, _, opts = spec.partition("-")
     if family not in _REGISTRY:
         raise ValueError(f"unknown runtime family {family!r} in spec "
                          f"{spec!r}; available: {available()}")
+    if faults is not None:
+        from repro.faults.models import corrupt_artifact
+        from repro.faults.plan import DYNAMIC_FIELDS, FaultPlan
+        plan = FaultPlan.coerce(faults)
+        if plan.has_static:
+            artifact = corrupt_artifact(artifact, plan)
+        if plan.has_dynamic:
+            if family != "board" or opts.partition("-")[0] != "py":
+                raise ValueError(
+                    f"dynamic fault plans (fields {DYNAMIC_FIELDS}) are only "
+                    f"emulated by the 'board-py' runtime; spec {spec!r} "
+                    f"cannot inject {plan.describe()}")
+            kw["faults"] = plan
     return _REGISTRY[family](artifact, opts, **kw)
 
 
@@ -143,7 +171,7 @@ def _accelerator(art: Artifact, opts: str, kernel: str = "jnp", **_):
 
 @register("board")
 def _board(art: Artifact, opts: str, latency_mode: bool = False,
-           kernel: str = "jnp", **_):
+           kernel: str = "jnp", faults=None, **_):
     from repro.board import SNNBoard, SNNBoardBatched
     mode, _, k = opts.partition("-")
     if mode in ("", "batched"):
@@ -157,6 +185,7 @@ def _board(art: Artifact, opts: str, latency_mode: bool = False,
         if k:
             raise ValueError(f"board-py takes no kernel suffix, got {k!r} "
                              "(the per-image scheduler is plain python)")
-        return SNNBoard(art, latency_mode=latency_mode)  # plain python path
+        # plain python path — the only family that emulates dynamic faults
+        return SNNBoard(art, latency_mode=latency_mode, faults=faults)
     raise ValueError(f"unknown board option {mode!r} "
                      "(use '', 'batched', 'py')")

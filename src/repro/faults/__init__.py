@@ -1,0 +1,21 @@
+"""Deterministic fault injection + detection for the SNN deployment stack.
+
+``plan``   — seeded, immutable ``FaultPlan`` recipes (what goes wrong);
+``models`` — the injectors interpreting a plan at the artifact / board /
+             lane sites (how it goes wrong);
+``detect`` — checksum, canary, trace, and ECC detectors (how it's caught).
+"""
+
+from repro.faults.detect import (Canary, ecc_errors, integrity_errors,
+                                 runtime_integrity_errors, trace_errors)
+from repro.faults.models import (FaultyAEREventQueue, InjectedFault,
+                                 LaneFaultInjector, MembraneUpsetInjector,
+                                 apply_stuck, corrupt_artifact)
+from repro.faults.plan import FaultPlan
+
+__all__ = [
+    "FaultPlan", "InjectedFault", "corrupt_artifact", "FaultyAEREventQueue",
+    "MembraneUpsetInjector", "apply_stuck", "LaneFaultInjector", "Canary",
+    "integrity_errors", "runtime_integrity_errors", "trace_errors",
+    "ecc_errors",
+]

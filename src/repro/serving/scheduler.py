@@ -25,6 +25,32 @@ Worker lanes:
     ``max_batch``-sized batches and serves them on the calling thread via
     lane 0. Deterministic batch count — the facade's flush() semantics.
 
+Resilience (the fault-injection subsystem's consumer — ``repro.faults``):
+  * ``faults=`` takes a seeded ``FaultPlan`` (or its spec string) and splits
+    it per lane; lane-fault fields drive a ``LaneFaultInjector`` around the
+    serve call, static/dynamic fields ride into ``make_runtime``;
+  * every lane runs a health state machine::
+
+        healthy --fault detected--> suspect --scrub+rebuild OK--> healthy
+                                       |                       (restarted)
+                                       '--checks still fail--> quarantined
+                                                                   |
+                                             (degrade=True)        v
+        degraded  <---- circuit breaker / quarantine ----  [dense fallback]
+
+    a detected fault (worker exception, post-batch verification failure,
+    watchdog timeout) requeues the in-flight batch (bounded per-request
+    retries with exponential backoff; multi-request batches are re-queued
+    ``solo`` so one poison request cannot re-kill its batchmates), then the
+    lane is rebuilt from the pristine artifact and must pass its startup
+    checks (artifact checksum + canary probes) to re-enter service;
+  * detection is ``faults.detect``: artifact SHA-256 re-hash at lane
+    startup / per batch, golden-canary probes per lane, board-trace
+    cross-checks, membrane-ECC readout — every counter lands in ``stats()``;
+  * the invariant all of this buys (the chaos bench's ``--check`` gate):
+    every admitted request completes with either a bit-exact label or an
+    explicit ``error`` — never a silent wrong answer, never a hang.
+
 Bit-exactness holds regardless of batching: every runtime evaluates rows
 independently, and pad rows never influence real ones, so a label served at
 queue depth 60 equals the label served alone — the load bench's ``--check``
@@ -43,6 +69,45 @@ import numpy as np
 
 from repro.core.artifact import Artifact
 from repro.core.runtimes import make_runtime
+from repro.faults.detect import (Canary, ecc_errors, runtime_integrity_errors,
+                                 trace_errors)
+from repro.faults.plan import FaultPlan
+
+
+class ServingError(RuntimeError):
+    """A request completed with ``.error`` set; carries the request."""
+
+    def __init__(self, request: "ServeRequest"):
+        super().__init__(f"request {request.rid} failed after "
+                         f"{request.attempts + 1} attempt(s): {request.error}")
+        self.request = request
+
+
+@dataclasses.dataclass
+class ResilienceConfig:
+    """Knobs for the scheduler's detection/recovery machinery. Defaults are
+    conservative: startup checks on, per-batch verification and the watchdog
+    off (they cost a detector pass / a monitor thread per batch)."""
+
+    max_retries: int = 2          # re-serves per request before giving up
+    backoff_s: float = 0.005      # base of the exponential restart backoff
+    watchdog_s: float | None = None   # per-batch serve deadline (threaded)
+    breaker_threshold: int = 3    # lane faults before the circuit breaker
+    startup_checks: bool = True   # checksum+canary at lane (re)commission
+    verify: bool = False          # post-batch detectors BEFORE completion
+    canary_every: int = 0         # also run canaries every N batches (0=off)
+    degrade: bool = True          # quarantined/flapping lanes → dense path
+
+    @classmethod
+    def coerce(cls, obj) -> "ResilienceConfig":
+        if obj is None:
+            return cls()
+        if isinstance(obj, cls):
+            return obj
+        if isinstance(obj, dict):
+            return cls(**obj)
+        raise TypeError(f"cannot build a ResilienceConfig from "
+                        f"{type(obj).__name__}")
 
 
 @dataclasses.dataclass
@@ -52,11 +117,13 @@ class ServeRequest:
     image: np.ndarray             # (N_in,) float32 in [0, 1]
     label: int | None = None      # filled at completion
     steps: int | None = None      # timesteps consumed (latency mode)
-    fallback_dense: bool = False  # served via the dense reroute
+    fallback_dense: bool = False  # served via the dense reroute / degraded lane
     lane: int | None = None       # worker lane that served it
     t_submit: float = 0.0         # perf_counter at admission
     t_done: float = 0.0           # perf_counter at completion
     error: str | None = None      # set instead of label if serving failed
+    attempts: int = 0             # re-serves consumed (0 = first try)
+    solo: bool = False            # poison isolation: serve in a batch of one
 
     @property
     def latency_us(self) -> float:
@@ -65,31 +132,55 @@ class ServeRequest:
 
 class _Lane:
     """One worker lane: a runtime built from the spec, plus the lane-local
-    serve path (event packing, overflow reroute, board accounting). Each
-    lane's counters are merged into the scheduler under its lock, so lanes
-    themselves stay lock-free on the hot path."""
+    serve path (event packing, overflow reroute, board accounting) and the
+    lane's health record. Each lane's counters are merged into the scheduler
+    under its lock, so lanes themselves stay lock-free on the hot path."""
 
     def __init__(self, lane_id: int, artifact: Artifact, spec: str,
-                 kernel: str | None, latency_mode: bool):
+                 kernel: str | None, latency_mode: bool,
+                 plan: FaultPlan | None = None):
         self.lane_id = lane_id
         self.art = artifact
         self.spec = spec
         self.family, _, _ = spec.partition("-")
         self.latency_mode = bool(latency_mode)
+        self.plan = plan
         kw = {"latency_mode": latency_mode}
         if kernel is not None:
             kw["kernel"] = kernel        # None = the family's own default
+        if plan is not None:
+            kw["faults"] = plan          # static/dynamic injection sites
         self.runtime = make_runtime(artifact, spec, **kw)
         self._dense = None               # built lazily on first overflow
         self.T = int(artifact.m("encode", "T"))
         self.x_min = float(artifact.m("encode", "x_min"))
         self.e_max = int(artifact.m("events", "e_max"))
+        self.injector = None             # host-side fault site (lane faults)
+        if plan is not None and plan.has_lane_faults:
+            from repro.faults.models import LaneFaultInjector
+            self.injector = LaneFaultInjector(plan)
+        # ------------------------------------------------- health record
+        self.health = "healthy"          # healthy|suspect|quarantined|degraded
+        self.fault_count = 0             # detected faults (feeds the breaker)
+        self.restarts = 0                # successful scrub/rebuild cycles
+        self.batches_served = 0          # serve attempts (canary cadence)
+        self.busy_since: float | None = None   # watchdog: batch start time
+        self.current: list | None = None       # watchdog: (request, token)s
+        self.hung = False                # watchdog fired on this lane
+        self.retired = False             # removed from service for good
+        self.degraded = False            # circuit-broken to the dense path
 
     # ------------------------------------------------------------- serve path
-    def serve(self, images: np.ndarray, k: int) -> dict:
+    def serve(self, images: np.ndarray, k: int, probe: bool = False) -> dict:
         """Serve a zero-padded (max_batch, N_in) buffer whose first ``k``
         rows are real traffic; returns labels/steps/fallback plus the
-        lane-local stat deltas for the scheduler to merge."""
+        lane-local stat deltas for the scheduler to merge. ``probe`` marks
+        canary traffic: it takes the same datapath but does not advance the
+        host-fault injector's batch clock."""
+        if self.injector is not None and not probe:
+            self.injector.before_batch()
+        if self.degraded:
+            return self._serve_dense(images, k)
         if self.family == "accelerator" and self.runtime.mode == "event":
             return self._serve_event(images, k)
         return self._serve_forward(images, k)
@@ -139,8 +230,7 @@ class _Lane:
             # time-batched path (same artifact, same semantics, no E_max
             # cap). Runs on the full fixed-shape padded buffer so the dense
             # program compiles once, not per distinct overflow-row count.
-            if self._dense is None:
-                self._dense = make_runtime(self.art, "accelerator-batch")
+            self._ensure_dense()
             t0 = time.perf_counter()
             dense_out = self._dense.forward(images=images)
             jax.block_until_ready(dense_out.labels)
@@ -150,34 +240,66 @@ class _Lane:
         return {"accel_s": accel_s, "labels": labels, "steps": steps,
                 "fallback": overflow, "overflow_fallbacks": int(bad.size)}
 
+    # ----------------------------------------------------- degraded fallback
+    def _ensure_dense(self) -> None:
+        if self._dense is None:
+            # built from the lane's PRISTINE artifact — a degraded lane must
+            # not inherit the faulted datapath it is escaping
+            self._dense = make_runtime(self.art, "accelerator-batch")
+
+    def _serve_dense(self, images: np.ndarray, k: int) -> dict:
+        """Circuit-broken path: the whole batch through the dense
+        time-batched runtime. Correct labels, none of the event-path
+        speed — graceful degradation, flagged per request."""
+        self._ensure_dense()
+        t0 = time.perf_counter()
+        out = self._dense.forward(images=images)
+        jax.block_until_ready(out.labels)
+        return {"accel_s": time.perf_counter() - t0,
+                "labels": np.asarray(out.labels),
+                "steps": np.asarray(out.steps),
+                "fallback": np.ones(len(images), bool),
+                "overflow_fallbacks": 0}
+
 
 class ServingScheduler:
     """Admission queue + deadline-aware micro-batching + N worker lanes.
 
     ``submit()`` is thread-safe and returns immediately with a request id;
     ``result(rid)`` blocks one caller until its request completes (the
-    closed-loop client API); ``drain()`` blocks until the queue is empty and
-    returns every completed-but-unclaimed request (the synchronous facade
-    API). ``stats()`` reports both measurement scopes plus request-latency
-    percentiles and queue-depth stats; ``reset_stats()`` zeroes them (e.g.
-    after a warmup pass, so compile time does not pollute percentiles)."""
+    closed-loop client API) and raises ``ServingError`` if the request
+    completed with ``.error`` set; ``drain()`` blocks until the queue is
+    empty and returns every completed-but-unclaimed request (the synchronous
+    facade API — errored requests are returned, not raised). ``stats()``
+    reports both measurement scopes plus request-latency percentiles,
+    queue-depth stats, and every fault-detection/recovery counter;
+    ``reset_stats()`` zeroes them (e.g. after a warmup pass, so compile time
+    does not pollute percentiles).
+
+    ``faults=`` injects a seeded ``repro.faults.FaultPlan`` (or its spec
+    string, e.g. ``"crash=0,lanes=0,seed=7"``); ``resilience=`` tunes the
+    detection/recovery machinery (see ``ResilienceConfig``);
+    ``canary_pool=`` supplies held-out images for the golden-canary
+    detector (enables canary checks at lane startup/restart)."""
 
     def __init__(self, artifact: Artifact, *, spec: str = "accelerator-event",
                  workers: int = 0, max_batch: int = 64,
                  max_wait_us: float = 2000.0, kernel: str | None = None,
-                 latency_mode: bool = False):
+                 latency_mode: bool = False, faults=None, resilience=None,
+                 canary_pool: np.ndarray | None = None):
         if workers < 0:
             raise ValueError(f"workers must be >= 0, got {workers}")
         self.art = artifact
         self.spec = spec
         self.family = spec.partition("-")[0]
+        self.kernel = kernel
         self.max_batch = int(max_batch)
         self.max_wait_us = float(max_wait_us)
         self.workers = int(workers)
         self.latency_mode = bool(latency_mode)
         self.n_in = int(artifact.m("model", "n_in"))
-        self.lanes = [_Lane(i, artifact, spec, kernel, latency_mode)
-                      for i in range(max(1, workers))]
+        self.plan = FaultPlan.coerce(faults)
+        self.resilience = ResilienceConfig.coerce(resilience)
 
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
@@ -185,28 +307,54 @@ class ServingScheduler:
         self._completed: dict[int, ServeRequest] = {}
         self._claims: set[int] = set()       # rids owned by result() waiters
         self._outstanding: set[int] = set()  # submitted, not yet completed
+        self._requests: dict[int, ServeRequest] = {}  # every outstanding req
         self._pending = 0
         self._next_rid = 0
         self._stop = False
+        self._all_quarantined = False
         self.reset_stats()
+
+        self.canary: Canary | None = None
+        if canary_pool is not None or self.resilience.canary_every:
+            self.canary = Canary.from_artifact(artifact, pool=canary_pool)
+        self.lanes = [self._commission(i) for i in range(max(1, workers))]
+        if all(lane.retired for lane in self.lanes):
+            # persistent faults + degrade=False can retire every lane at
+            # commission time: refuse admission instead of hanging drain()
+            self._all_quarantined = True
+        self._lane_gens = [0] * len(self.lanes)
         self._threads = [
-            threading.Thread(target=self._worker, args=(lane,), daemon=True,
-                             name=f"serve-lane-{lane.lane_id}")
+            threading.Thread(target=self._worker, args=(lane.lane_id, 0),
+                             daemon=True, name=f"serve-lane-{lane.lane_id}")
             for lane in (self.lanes if workers else [])]
         for t in self._threads:
             t.start()
+        self._watchdog_thread = None
+        if self._threads and self.resilience.watchdog_s:
+            self._watchdog_thread = threading.Thread(
+                target=self._watchdog_loop, daemon=True, name="serve-watchdog")
+            self._watchdog_thread.start()
 
     # ---------------------------------------------------------------- client
     def submit(self, image: np.ndarray) -> int:
+        image = np.asarray(image, np.float32)
+        if image.shape != (self.n_in,):
+            # reject malformed traffic at admission — a bad shape must never
+            # reach a lane where it would poison a whole batch
+            raise ValueError(f"image must have shape ({self.n_in},), got "
+                             f"{image.shape}")
         with self._cv:
             if self._stop:
                 raise RuntimeError("scheduler is closed")
+            if self._all_quarantined:
+                raise RuntimeError("all lanes quarantined — no serving "
+                                   "capacity left (degrade=False)")
             rid = self._next_rid
             self._next_rid += 1
-            req = ServeRequest(rid, np.asarray(image, np.float32),
-                               t_submit=time.perf_counter())
+            req = ServeRequest(rid, image, t_submit=time.perf_counter())
             self._admission.append(req)
             self._outstanding.add(rid)
+            self._requests[rid] = req
             self._pending += 1
             self._sample_depth()
             self._cv.notify_all()
@@ -214,11 +362,12 @@ class ServingScheduler:
 
     def result(self, rid: int, timeout: float | None = None) -> ServeRequest:
         """Block until request ``rid`` completes; pops and returns it (the
-        closed-loop client API). Inline mode serves the queue first. The
-        rid is CLAIMED while waiting — a concurrent ``drain()`` will not
-        return it out from under this caller — and a rid that is neither
-        outstanding nor completed (already drained or returned) raises
-        KeyError instead of blocking forever."""
+        closed-loop client API). Raises ``ServingError`` (carrying the
+        request) if it completed with ``.error`` set. Inline mode serves the
+        queue first. The rid is CLAIMED while waiting — a concurrent
+        ``drain()`` will not return it out from under this caller — and a
+        rid that is neither outstanding nor completed (already drained or
+        returned) raises KeyError instead of blocking forever."""
         with self._cv:
             if rid not in self._completed and rid not in self._outstanding:
                 raise KeyError(f"request {rid} is not outstanding — already "
@@ -238,10 +387,13 @@ class ServingScheduler:
                         raise TimeoutError(f"request {rid} not completed "
                                            f"within {timeout}s")
                     self._cv.wait(timeout=remaining)
-                return self._completed.pop(rid)
+                req = self._completed.pop(rid)
         finally:
             with self._cv:
                 self._claims.discard(rid)
+        if req.error is not None:
+            raise ServingError(req)
+        return req
 
     def drain(self) -> dict[int, ServeRequest]:
         """Serve/await everything queued; pop and return every completed
@@ -257,19 +409,34 @@ class ServingScheduler:
                 del self._completed[rid]
             return done
 
-    def close(self) -> None:
-        """Stop the worker lanes. Batches in flight finish; the unserved
-        backlog is NOT drained — its requests complete immediately with
-        ``error="scheduler closed"`` so no waiter hangs."""
+    def close(self, drain: bool = False) -> None:
+        """Stop the worker lanes. Batches in flight finish. With
+        ``drain=True`` the queued backlog is served first (graceful drain);
+        by default it is NOT served — its requests complete immediately with
+        ``error="scheduler closed"``. Either way every admitted request is
+        completed: no waiter hangs, nothing is dropped silently."""
+        if drain and not self._stop:
+            if self._threads:
+                with self._cv:
+                    while (self._pending
+                           and any(t.is_alive() for t in self._threads)):
+                        self._cv.wait(timeout=0.05)
+            else:
+                self._drain_inline()
         with self._cv:
             self._stop = True
             self._cv.notify_all()
         for t in self._threads:
-            t.join()
+            t.join(timeout=30.0)
+        if self._watchdog_thread is not None:
+            self._watchdog_thread.join(timeout=30.0)
         with self._cv:
             now = time.perf_counter()
-            while self._admission:
-                r = self._admission.popleft()
+            self._admission.clear()
+            # queued AND in-flight-on-a-dead-lane: everything still
+            # outstanding is error-completed so no submitter is stranded
+            for rid in sorted(self._outstanding):
+                r = self._requests[rid]
                 r.error = "scheduler closed"
                 r.t_done = now
                 self._complete_locked(r)
@@ -285,6 +452,7 @@ class ServingScheduler:
         """Caller holds the lock: publish a finished request, releasing its
         outstanding slot and bounding the unclaimed backlog."""
         self._outstanding.discard(r.rid)
+        self._requests.pop(r.rid, None)
         self._completed[r.rid] = r
         while len(self._completed) > self.COMPLETED_WINDOW:
             victim = next((rid for rid in self._completed
@@ -293,6 +461,19 @@ class ServingScheduler:
                 break
             del self._completed[victim]
             self._abandoned += 1
+
+    def _fail_locked(self, r: ServeRequest, tok: int, msg: str,
+                     lane_id: int | None, now: float) -> None:
+        """Caller holds the lock: error-complete one request (token-guarded
+        so a stale thread cannot double-complete a requeued request)."""
+        if r.rid not in self._outstanding or r.attempts != tok:
+            return
+        r.error = msg
+        r.lane = lane_id
+        r.t_done = now
+        self._complete_locked(r)
+        self._pending -= 1
+        self.errors += 1
 
     def __enter__(self):
         return self
@@ -304,16 +485,23 @@ class ServingScheduler:
     # ------------------------------------------------------- batch formation
     def _form_batch(self) -> list[ServeRequest] | None:
         """Blocking formation for worker lanes: open on the oldest queued
-        request, close at max_batch OR max_wait_us — whichever first."""
+        request, close at max_batch OR max_wait_us — whichever first.
+        ``solo`` requests (poison isolation after a batch failure) always
+        form a batch of one."""
         with self._cv:
             while not self._admission and not self._stop:
                 self._cv.wait()
             if self._stop:                   # no NEW batches after close():
                 return None                  # the backlog is failed, not served
             batch = [self._admission.popleft()]
+            if batch[0].solo:
+                self._sample_depth()
+                return batch
             deadline = time.perf_counter() + self.max_wait_us * 1e-6
             while len(batch) < self.max_batch:
                 if self._admission:
+                    if self._admission[0].solo:
+                        break                # isolation batch forms alone
                     batch.append(self._admission.popleft())
                     continue
                 remaining = deadline - time.perf_counter()
@@ -323,8 +511,14 @@ class ServingScheduler:
             self._sample_depth()
             return batch
 
-    def _worker(self, lane: _Lane) -> None:
+    def _worker(self, lane_id: int, gen: int) -> None:
         while True:
+            with self._cv:
+                if self._lane_gens[lane_id] != gen:
+                    return   # superseded by a watchdog replacement thread
+                lane = self.lanes[lane_id]
+                if lane.retired:
+                    return
             batch = self._form_batch()
             if batch is None:
                 return
@@ -346,31 +540,52 @@ class ServingScheduler:
     def _serve_batch(self, lane: _Lane, batch: list[ServeRequest]) -> None:
         t0 = time.perf_counter()
         k = len(batch)
+        pairs = [(r, r.attempts) for r in batch]   # completion tokens
+        lane.current = pairs
+        lane.busy_since = t0
+        lane.batches_served += 1
+        failure: str | None = None
+        exc: BaseException | None = None
+        delta = None
         try:
             images = np.zeros((self.max_batch, self.n_in), np.float32)
             for j, r in enumerate(batch):
                 images[j] = r.image          # zero-pad to the fixed shape
             delta = lane.serve(images, k)
-        except Exception as e:
-            # fail the batch, never strand it: requests complete with
-            # .error set, _pending is released, waiters wake. Inline mode
-            # re-raises so the synchronous caller still sees the exception.
-            now = time.perf_counter()
-            with self._cv:
-                for r in batch:
-                    r.error = f"{type(e).__name__}: {e}"
-                    r.lane = lane.lane_id
-                    r.t_done = now
-                    self._complete_locked(r)
-                self._pending -= k
-                self.errors += k
-                self._cv.notify_all()
-            if not self._threads:
-                raise
-            return
+            if self.resilience.verify:
+                errs = self._verify_errors(lane, images)
+                if errs:
+                    failure = "detected fault: " + "; ".join(errs)
+        except Exception as e:  # noqa: BLE001 — any serve failure is a fault
+            exc = e
+            failure = f"{type(e).__name__}: {e}"
+        finally:
+            lane.busy_since = None
+            lane.current = None
         now = time.perf_counter()
+
+        if failure is not None:
+            if not self._threads:
+                # inline mode: no retry machinery — complete with .error so
+                # nothing strands, then surface to the synchronous caller
+                with self._cv:
+                    self.lane_faults += 1
+                    for r, tok in pairs:
+                        self._fail_locked(r, tok, failure, lane.lane_id, now)
+                    self._cv.notify_all()
+                if exc is not None:
+                    raise exc
+                raise ServingError(batch[0])
+            self._handle_lane_fault(lane, pairs, failure)
+            return
+
         with self._cv:
-            for j, r in enumerate(batch):
+            if self.lanes[lane.lane_id] is not lane or lane.hung:
+                return  # superseded mid-serve; the watchdog requeued these
+            completed = 0
+            for j, (r, tok) in enumerate(pairs):
+                if r.rid not in self._outstanding or r.attempts != tok:
+                    continue                 # stale: requeued/completed away
                 r.label = int(delta["labels"][j])
                 r.steps = int(delta["steps"][j])
                 r.fallback_dense = bool(delta["fallback"][j])
@@ -378,8 +593,9 @@ class ServingScheduler:
                 r.t_done = now
                 self._complete_locked(r)
                 self._latencies_us.append(r.latency_us)
-            self._pending -= k
-            self.images_out += k
+                completed += 1
+            self._pending -= completed
+            self.images_out += completed
             self.batches += 1
             self._batch_fill += k
             self.accel_s += delta["accel_s"]
@@ -389,6 +605,307 @@ class ServingScheduler:
             self.board_nj += delta.get("board_nj", 0.0)
             self.board_stalls += delta.get("board_stalls", 0)
             self._cv.notify_all()
+
+    # ------------------------------------------------------------- detection
+    def _verify_errors(self, lane: _Lane, images: np.ndarray) -> list[str]:
+        """Post-batch detector pass, run BEFORE completion so a corrupted
+        label can never escape to a caller: membrane-ECC readout, board
+        trace cross-check, artifact checksum, periodic canaries."""
+        if lane.degraded:
+            return []                        # dense fallback: clean by build
+        errs = ecc_errors(lane.runtime)
+        with self._lock:
+            if errs:
+                self.ecc_detected += 1
+        t_errs = trace_errors(lane.runtime, images)
+        with self._lock:
+            self.trace_checks += 1
+            if t_errs:
+                self.trace_failures += 1
+        errs += t_errs
+        i_errs = runtime_integrity_errors(lane.runtime)
+        with self._lock:
+            self.integrity_checks += 1
+            if i_errs:
+                self.integrity_failures += 1
+        errs += i_errs
+        every = self.resilience.canary_every
+        if (self.canary is not None and every
+                and lane.batches_served % every == 0):
+            errs += self._canary_errors(lane)
+        return errs
+
+    def _canary_errors(self, lane: _Lane) -> list[str]:
+        """Serve the pinned canary probes through the lane's OWN datapath
+        and compare against the reference labels built at startup."""
+        got: list[int] = []
+        try:
+            imgs = self.canary.images
+            for i in range(0, len(imgs), self.max_batch):
+                chunk = imgs[i:i + self.max_batch]
+                buf = np.zeros((self.max_batch, self.n_in), np.float32)
+                buf[:len(chunk)] = chunk
+                delta = lane.serve(buf, len(chunk), probe=True)
+                got.extend(int(x) for x in delta["labels"][:len(chunk)])
+            errs = self.canary.mismatches(got)
+        except Exception as e:  # noqa: BLE001 — a crash IS a failed probe
+            errs = [f"canary probe serve failed: {type(e).__name__}: {e}"]
+        with self._lock:
+            self.canary_checks += 1
+            if errs:
+                self.canary_failures += 1
+        return errs
+
+    def _startup_errors(self, lane: _Lane) -> list[str]:
+        """Commission / quarantine re-entry checks: artifact checksum on the
+        lane's in-memory copy, then the canary probes (when built)."""
+        errs = runtime_integrity_errors(lane.runtime)
+        with self._lock:
+            self.integrity_checks += 1
+            if errs:
+                self.integrity_failures += 1
+        if self.canary is not None:
+            errs = errs + self._canary_errors(lane)
+        return errs
+
+    def _warm_errors(self, lane: _Lane) -> list[str]:
+        """Prime the lane's compiled programs with a zero probe batch BEFORE
+        it enters service — the watchdog must never mistake first-serve
+        compilation for a hang (a lane is 'ready' only once programmed, as a
+        bitstream load would be). A warmup crash is a commissioning fault."""
+        try:
+            lane.serve(np.zeros((self.max_batch, self.n_in), np.float32), 0,
+                       probe=True)
+            return []
+        except Exception as e:  # noqa: BLE001 — failed warmup = failed lane
+            return [f"lane warmup failed: {type(e).__name__}: {e}"]
+
+    # -------------------------------------------------------------- recovery
+    def _commission(self, lane_id: int) -> _Lane:
+        """Build lane ``lane_id`` and gate it through the startup checks: a
+        lane that fails (e.g. an SEU already in its BRAM image) is scrubbed
+        and rebuilt once; if the fault survives the rebuild (persistent), it
+        is quarantined — degraded to the dense path when allowed."""
+        plan = self.plan.for_lane(lane_id) if self.plan is not None else None
+        lane = _Lane(lane_id, self.art, self.spec, self.kernel,
+                     self.latency_mode, plan)
+        errs = self._warm_errors(lane)
+        if not errs and self.resilience.startup_checks:
+            errs = self._startup_errors(lane)
+        if not errs:
+            return lane
+        t0 = time.perf_counter()
+        with self._lock:
+            self.lane_faults += 1
+        fresh = _Lane(lane_id, self.art, self.spec, self.kernel,
+                      self.latency_mode,
+                      plan.after_scrub() if plan is not None else None)
+        fresh.fault_count = 1
+        fresh.restarts = 1
+        errs = self._warm_errors(fresh)
+        if not errs and self.resilience.startup_checks:
+            errs = self._startup_errors(fresh)
+        if not errs:
+            with self._lock:
+                self.lane_restarts += 1
+                self.recoveries += 1
+                self._recovery_ms.append(1e3 * (time.perf_counter() - t0))
+            return fresh
+        with self._lock:
+            fresh.health = "quarantined"
+            self.quarantines += 1
+        if self.resilience.degrade:
+            self._degrade(fresh)
+        else:
+            fresh.retired = True
+        return fresh
+
+    def _handle_lane_fault(self, lane: _Lane, pairs: list, reason: str
+                           ) -> None:
+        """Threaded fault path: requeue-or-fail the batch, then take the
+        lane through suspect → (restarted | quarantined | degraded)."""
+        t_fault = time.perf_counter()
+        with self._cv:
+            if self.lanes[lane.lane_id] is not lane or lane.hung:
+                self._cv.notify_all()
+                return  # the watchdog superseded this lane mid-serve
+            lane.health = "suspect"
+            lane.fault_count += 1
+            self.lane_faults += 1
+            self._requeue_locked(pairs, reason, lane.lane_id)
+            self._cv.notify_all()
+        self._recover_lane(lane, t_fault)
+
+    def _requeue_locked(self, pairs: list, reason: str, lane_id: int) -> None:
+        """Caller holds the lock: push a failed batch's requests back to the
+        FRONT of the admission queue (bounded retries; batches of more than
+        one requeue ``solo`` so a poison request cannot re-kill batchmates)."""
+        now = time.perf_counter()
+        isolate = len(pairs) > 1
+        for r, tok in reversed(pairs):
+            if r.rid not in self._outstanding or r.attempts != tok:
+                continue                     # stale token: already handled
+            r.attempts += 1
+            if r.attempts > self.resilience.max_retries:
+                r.attempts -= 1              # restore for the error message
+                self._fail_locked(r, tok, f"{reason} (gave up after "
+                                  f"{r.attempts + 1} attempts)", lane_id, now)
+                continue
+            if isolate:
+                r.solo = True
+            self._admission.appendleft(r)
+            self.requeued += 1
+
+    def _recover_lane(self, lane: _Lane, t_fault: float) -> None:
+        """Scrub/reload recovery: exponential backoff, rebuild the lane's
+        runtime from the pristine artifact, re-gate through the startup
+        checks. Flapping lanes hit the circuit breaker and degrade."""
+        res = self.resilience
+        time.sleep(min(res.backoff_s * (2 ** min(lane.restarts, 6)), 1.0))
+        if res.degrade and lane.fault_count >= res.breaker_threshold:
+            self._degrade(lane)              # circuit breaker: stop flapping
+            return
+        fresh = None
+        errs: list[str] = []
+        try:
+            fresh = _Lane(lane.lane_id, self.art, self.spec, self.kernel,
+                          self.latency_mode,
+                          lane.plan.after_scrub() if lane.plan is not None
+                          else None)
+            errs = self._warm_errors(fresh)
+            if not errs and res.startup_checks:
+                errs = self._startup_errors(fresh)
+        except Exception as e:  # noqa: BLE001 — a failed rebuild quarantines
+            errs = [f"lane rebuild failed: {type(e).__name__}: {e}"]
+        with self._cv:
+            if self.lanes[lane.lane_id] is not lane:
+                return
+            if fresh is not None and not errs:
+                fresh.fault_count = lane.fault_count
+                fresh.restarts = lane.restarts + 1
+                self.lanes[lane.lane_id] = fresh
+                self.lane_restarts += 1
+                self.recoveries += 1
+                self._recovery_ms.append(1e3 * (time.perf_counter() - t_fault))
+                self._cv.notify_all()
+                return
+            lane.health = "quarantined"
+            self.quarantines += 1
+            self._cv.notify_all()
+        if res.degrade:
+            self._degrade(lane)
+        else:
+            self._retire(lane)
+
+    def _degrade(self, lane: _Lane) -> None:
+        """Circuit breaker: route the lane's traffic through the dense
+        fallback runtime (built from the pristine artifact) and disarm any
+        host-fault injector — correctness preserved, event path abandoned."""
+        try:
+            lane._ensure_dense()
+        except Exception:  # noqa: BLE001 — no fallback either: retire
+            self._retire(lane)
+            return
+        with self._cv:
+            lane.degraded = True
+            lane.health = "degraded"
+            if lane.injector is not None:
+                lane.injector.disarm()
+            self.breaker_degraded += 1
+            self._cv.notify_all()
+
+    def _retire(self, lane: _Lane) -> None:
+        """Remove a lane from service for good. If that was the last one,
+        fail the queue rather than letting it hang forever. (During
+        ``__init__`` commissioning ``self.lanes`` does not exist yet; the
+        all-retired case there is handled after the lane list is built.)"""
+        with self._cv:
+            lane.retired = True
+            lane.health = "quarantined"
+            lanes = getattr(self, "lanes", None)
+            if lanes is not None and all(l.retired for l in lanes) \
+                    and getattr(self, "_threads", None):
+                self._all_quarantined = True
+                now = time.perf_counter()
+                while self._admission:
+                    r = self._admission.popleft()
+                    self._fail_locked(r, r.attempts,
+                                      "all lanes quarantined", None, now)
+            self._cv.notify_all()
+
+    # -------------------------------------------------------------- watchdog
+    def _watchdog_loop(self) -> None:
+        """Monitor thread: a lane whose batch exceeds ``watchdog_s`` is
+        declared hung — its in-flight requests are requeued immediately and
+        a replacement lane (fresh thread, scrubbed runtime) takes its slot;
+        the hung thread's eventual results are discarded by token checks."""
+        w = float(self.resilience.watchdog_s)
+        tick = max(w / 4.0, 0.002)
+        while True:
+            victims = []
+            with self._cv:
+                if self._stop:
+                    return
+                now = time.perf_counter()
+                for lane in list(self.lanes):
+                    b = lane.busy_since
+                    if b is not None and now - b > w and not lane.hung:
+                        lane.hung = True
+                        lane.health = "suspect"
+                        lane.fault_count += 1
+                        self.lane_faults += 1
+                        self.watchdog_timeouts += 1
+                        self._requeue_locked(
+                            lane.current or [],
+                            f"watchdog: batch exceeded {w:.3f}s on lane "
+                            f"{lane.lane_id}", lane.lane_id)
+                        victims.append((lane, now))
+                if victims:
+                    self._cv.notify_all()
+            for lane, t_fault in victims:
+                self._replace_hung_lane(lane, t_fault)
+            time.sleep(tick)
+
+    def _replace_hung_lane(self, lane: _Lane, t_fault: float) -> None:
+        fresh = None
+        errs: list[str] = []
+        try:
+            fresh = _Lane(lane.lane_id, self.art, self.spec, self.kernel,
+                          self.latency_mode,
+                          lane.plan.after_scrub() if lane.plan is not None
+                          else None)
+            errs = self._warm_errors(fresh)
+            if not errs and self.resilience.startup_checks:
+                errs = self._startup_errors(fresh)
+        except Exception as e:  # noqa: BLE001
+            errs = [f"lane rebuild failed: {type(e).__name__}: {e}"]
+        spawn = None
+        with self._cv:
+            if self.lanes[lane.lane_id] is not lane:
+                return
+            if fresh is not None and not errs:
+                fresh.fault_count = lane.fault_count
+                fresh.restarts = lane.restarts + 1
+                self.lanes[lane.lane_id] = fresh
+                self._lane_gens[lane.lane_id] += 1
+                gen = self._lane_gens[lane.lane_id]
+                self.lane_restarts += 1
+                self.recoveries += 1
+                self._recovery_ms.append(1e3 * (time.perf_counter() - t_fault))
+                spawn = threading.Thread(
+                    target=self._worker, args=(lane.lane_id, gen),
+                    daemon=True, name=f"serve-lane-{lane.lane_id}r{gen}")
+                self._threads.append(spawn)
+            else:
+                lane.health = "quarantined"
+                self.quarantines += 1
+            self._cv.notify_all()
+        if spawn is not None:
+            spawn.start()
+        else:
+            # the hung thread still owns the old lane object, so the breaker
+            # cannot reuse it — a failed replacement retires the slot
+            self._retire(lane)
 
     # ---------------------------------------------------------------- stats
     def _sample_depth(self) -> None:
@@ -411,6 +928,19 @@ class ServingScheduler:
             self.board_cycles = 0
             self.board_nj = 0.0
             self.board_stalls = 0
+            # ---- detection / recovery counters (the tentpole's ledger) ----
+            self.lane_faults = 0          # detected faults, all sources
+            self.requeued = 0             # requests pushed back for retry
+            self.watchdog_timeouts = 0    # batches the watchdog cancelled
+            self.lane_restarts = 0        # successful scrub/rebuild cycles
+            self.quarantines = 0          # rebuilds that failed their checks
+            self.breaker_degraded = 0     # lanes circuit-broken to dense
+            self.recoveries = 0           # fault→healthy round trips
+            self._recovery_ms: list[float] = []
+            self.integrity_checks = self.integrity_failures = 0
+            self.canary_checks = self.canary_failures = 0
+            self.trace_checks = self.trace_failures = 0
+            self.ecc_detected = 0
             self._latencies_us: collections.deque[float] = collections.deque(
                 maxlen=self.LATENCY_WINDOW)
             self._batch_fill = 0
@@ -450,9 +980,28 @@ class ServingScheduler:
                 "queue_depth_peak": self._depth_peak,
                 "batch_fill_mean": (self._batch_fill / self.batches
                                     if self.batches else 0.0),
+                # ---- resilience ledger ----
+                "lane_faults": self.lane_faults,
+                "requeued": self.requeued,
+                "watchdog_timeouts": self.watchdog_timeouts,
+                "lane_restarts": self.lane_restarts,
+                "quarantines": self.quarantines,
+                "breaker_degraded": self.breaker_degraded,
+                "recoveries": self.recoveries,
+                "recovery_ms_mean": (float(np.mean(self._recovery_ms))
+                                     if self._recovery_ms else 0.0),
+                "integrity_checks": self.integrity_checks,
+                "integrity_failures": self.integrity_failures,
+                "canary_checks": self.canary_checks,
+                "canary_failures": self.canary_failures,
+                "trace_checks": self.trace_checks,
+                "trace_failures": self.trace_failures,
+                "ecc_detected": self.ecc_detected,
+                "lane_health": [lane.health for lane in self.lanes],
             }
             if self.family == "board":
-                clock = self.lanes[0].runtime.cost.clock_hz
+                cost = getattr(self.lanes[0].runtime, "cost", None)
+                clock = cost.clock_hz if cost is not None else 1.0
                 st.update({
                     "board_cycles": self.board_cycles,
                     "board_stalls": self.board_stalls,

@@ -29,7 +29,8 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.artifact import Artifact
-from repro.serving.scheduler import ServeRequest, ServingScheduler
+from repro.serving.scheduler import (ServeRequest, ServingError,
+                                     ServingScheduler)
 
 # back-compat alias: completed requests returned by flush() used to be
 # SNNRequest instances; they are the scheduler's ServeRequest now
@@ -67,7 +68,8 @@ class SNNServeEngine:
     def __init__(self, artifact: Artifact, *, max_batch: int = 64,
                  kernel: str | None = None, latency_mode: bool = False,
                  backend: str = "accelerator", workers: int = 0,
-                 max_wait_us: float = 2000.0):
+                 max_wait_us: float = 2000.0, faults=None, resilience=None,
+                 canary_pool: np.ndarray | None = None):
         if backend not in _BACKEND_SPECS:
             raise ValueError(f"unknown backend {backend!r}")
         self.art = artifact
@@ -79,7 +81,8 @@ class SNNServeEngine:
         self.sched = ServingScheduler(
             artifact, spec=_BACKEND_SPECS[backend], workers=workers,
             max_batch=max_batch, max_wait_us=max_wait_us, kernel=kernel,
-            latency_mode=latency_mode)
+            latency_mode=latency_mode, faults=faults, resilience=resilience,
+            canary_pool=canary_pool)
         # the facade's runtime (lane 0's) — kept as .accel for back-compat
         self.accel = self.sched.lanes[0].runtime
         self._unclaimed: dict[int, ServeRequest] = {}
@@ -108,6 +111,10 @@ class SNNServeEngine:
         done = self.flush()
         out = [done.pop(r) for r in rids]
         self._unclaimed.update(done)
+        for r in out:
+            if r.error is not None:
+                # never hand back a fabricated label for a failed request
+                raise ServingError(r)
         return np.asarray([r.label for r in out], np.int32)
 
     def close(self) -> None:

@@ -1,0 +1,242 @@
+"""Fault-injection subsystem: seeded plans, the three injection sites
+(artifact SEU / board datapath / host lanes), the matched detectors, and the
+clean-plan guarantee — ``FaultPlan.none()`` must leave every datapath
+bit-exact (checked against the PR 4 golden traces)."""
+
+import copy
+
+import numpy as np
+import pytest
+
+from repro.board.event_queue import AEREventQueue
+from repro.board.neuron_core import GroupedNeuronCore
+from repro.conformance import fuzz_case
+from repro.conformance.golden import golden_path
+from repro.core.hw import PYNQ_COST
+from repro.core.quant import INT32_NEVER_FIRE
+from repro.core.runtimes import make_runtime
+from repro.faults import (Canary, FaultPlan, FaultyAEREventQueue,
+                          apply_stuck, corrupt_artifact, ecc_errors,
+                          integrity_errors, trace_errors)
+
+
+@pytest.fixture(scope="module")
+def fuzz0():
+    return fuzz_case(0)
+
+
+# ---------------------------------------------------------------------- plan
+def test_plan_parse_grammar():
+    p = FaultPlan.parse("seu_weight=4,aer_drop=0.02,crash=0:2,seed=7")
+    assert p.seu_weight_flips == 4 and p.aer_drop_rate == 0.02
+    assert p.crash_batches == (0, 2) and p.seed == 7
+    assert p.has_static and p.has_dynamic and p.has_lane_faults
+    assert FaultPlan.parse("").is_clean
+    assert FaultPlan.parse("fifo=4").fifo_depth == 4
+    assert FaultPlan.parse("persistent=true,stuck=1").persistent
+    with pytest.raises(ValueError, match="unknown fault-plan key"):
+        FaultPlan.parse("bogus=1")
+    with pytest.raises(ValueError, match="needs '=value'"):
+        FaultPlan.parse("seu_weight")
+
+
+def test_plan_coerce_and_lifecycle():
+    p = FaultPlan(seed=3, crash_batches=(0,), lanes=(1,))
+    assert FaultPlan.coerce(p) is p
+    assert FaultPlan.coerce(None) is None
+    assert FaultPlan.coerce({"seed": 2}).seed == 2
+    assert FaultPlan.coerce("seu_thr=1").seu_threshold_flips == 1
+    with pytest.raises(TypeError):
+        FaultPlan.coerce(42)
+    # lane split: out-of-scope lanes serve clean, in-scope decorrelate seeds
+    assert p.for_lane(0).is_clean
+    assert p.for_lane(1).crash_batches == (0,)
+    assert p.for_lane(1).seed != p.seed
+    # scrub clears transient plans, keeps persistent ones
+    assert p.after_scrub().is_clean
+    pp = FaultPlan(seu_weight_flips=2, persistent=True)
+    assert pp.after_scrub() is pp
+
+
+def test_plan_rng_deterministic_and_stream_decorrelated():
+    a = FaultPlan(seed=5).rng("aer", 0).randint(1 << 30, size=8)
+    b = FaultPlan(seed=5).rng("aer", 0).randint(1 << 30, size=8)
+    c = FaultPlan(seed=5).rng("aer", 1).randint(1 << 30, size=8)
+    d = FaultPlan(seed=6).rng("aer", 0).randint(1 << 30, size=8)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c) and not np.array_equal(a, d)
+
+
+# -------------------------------------------------------------- artifact SEU
+def test_corrupt_artifact_detected_and_original_pristine(fuzz0):
+    art = fuzz0.artifact
+    before = {k: v.copy() for k, v in art.arrays.items()}
+    plan = FaultPlan(seed=9, seu_weight_flips=3, seu_threshold_flips=1)
+    bad = corrupt_artifact(art, plan)
+    # the detector: the clone's manifest was stamped from PRISTINE arrays
+    assert integrity_errors(bad)
+    # determinism: same plan, same flipped bits
+    bad2 = corrupt_artifact(art, plan)
+    for k in bad.arrays:
+        assert np.array_equal(bad.arrays[k], bad2.arrays[k])
+    # the caller's artifact is untouched (it backs the scrub/reload path)
+    for k, v in before.items():
+        assert np.array_equal(art.arrays[k], v)
+    assert integrity_errors(art) == []   # no manifest -> vacuously intact
+    assert corrupt_artifact(art, FaultPlan.none()) is art
+
+
+def test_make_runtime_static_plan_any_family_dynamic_board_py_only(fuzz0):
+    art = fuzz0.artifact
+    rt = make_runtime(art, "reference", faults="seu_weight=2,seed=1")
+    assert integrity_errors(rt.art)      # corrupted clone rides in
+    assert integrity_errors(art) == []   # original pristine
+    # dynamic plans only make sense where the datapath is emulated
+    with pytest.raises(ValueError, match="board-py"):
+        make_runtime(art, "accelerator-event", faults="aer_drop=0.1")
+    with pytest.raises(ValueError, match="board-py"):
+        make_runtime(art, "reference", faults="membrane=0.5")
+    make_runtime(art, "board-py", faults="aer_drop=0.1")   # accepted
+
+
+# ------------------------------------------------------------------ AER link
+def test_aer_queue_depth_exact_boundary():
+    """Stall accounting at the exact FIFO boundary: a tick holding exactly
+    ``depth`` events backpressures nothing; one more event stalls one cycle."""
+    T, n = 4, 6
+    times = np.zeros(n, np.int64)                # n events flood tick 0
+    q_fit = AEREventQueue(times, T, depth=n)
+    q_over = AEREventQueue(times, T, depth=n - 1)
+    assert q_fit.stalls_at(0) == 0
+    assert q_over.stalls_at(0) == 1
+    assert q_fit.total_events == q_over.total_events == n   # never drops
+
+
+def test_faulty_aer_queue_drop_dup_reorder(fuzz0):
+    art, times = fuzz0.artifact, fuzz0.times
+    T = int(art.m("encode", "T"))
+    depth = int(art.m("events", "e_max"))
+    row = times[0]
+    clean = AEREventQueue(row, T, depth)
+    drop = FaultyAEREventQueue(row, T, depth,
+                               FaultPlan(seed=1, aer_drop_rate=0.5))
+    dup = FaultyAEREventQueue(row, T, depth,
+                              FaultPlan(seed=1, aer_dup_rate=0.5))
+    reorder = FaultyAEREventQueue(row, T, depth,
+                                  FaultPlan(seed=1, aer_reorder_rate=0.5))
+    assert drop.total_events == clean.total_events - drop.injected_drops
+    assert drop.injected_drops > 0
+    assert dup.total_events == clean.total_events + dup.injected_dups
+    assert dup.injected_dups > 0
+    # reorder preserves the event multiset, only displaces across tick edges
+    assert reorder.total_events == clean.total_events
+    assert reorder.injected_moves > 0
+    ids = lambda q: sorted(int(i) for t in range(T) for i in q.events_at(t))
+    assert ids(reorder) == ids(clean)
+    # determinism: the same (plan, image_key) perturbs identically
+    drop2 = FaultyAEREventQueue(row, T, depth,
+                                FaultPlan(seed=1, aer_drop_rate=0.5))
+    assert all(np.array_equal(drop.events_at(t), drop2.events_at(t))
+               for t in range(T))
+
+
+def test_fifo_depth_override_stalls_only(fuzz0):
+    """A forced-tiny FIFO is pure backpressure: labels bit-exact, stall
+    cycles charged in the account."""
+    art, images = fuzz0.artifact, fuzz0.images[:3]
+    clean = make_runtime(art, "board-py")
+    faulty = make_runtime(art, "board-py", faults="fifo=1")
+    out_c, out_f = clean.forward(images), faulty.forward(images)
+    assert np.array_equal(out_c.labels, out_f.labels)
+    assert np.array_equal(out_c.first_spike, out_f.first_spike)
+    assert int(np.sum(faulty.last_trace.stalls)) > int(
+        np.sum(clean.last_trace.stalls))
+    assert trace_errors(faulty, images) == []   # consistent with its depth
+
+
+# ------------------------------------------------------------ board datapath
+def test_membrane_seu_hits_ecc(fuzz0):
+    art, images = fuzz0.artifact, fuzz0.images[:2]
+    rt = make_runtime(art, "board-py", faults="membrane=0.9,seed=2")
+    rt.forward(images)
+    assert int(np.sum(rt.last_ecc)) > 0
+    assert ecc_errors(rt)                       # the parity detector fires
+    clean = make_runtime(art, "board-py")
+    clean.forward(images)
+    assert ecc_errors(clean) == []
+
+
+def test_apply_stuck_modes_and_readout_restriction(trained_artifact):
+    art, _, _ = trained_artifact
+    n_out = int(art.m("model", "n_out"))
+    core = GroupedNeuronCore.from_artifact(art, PYNQ_COST)
+    readout_span = -(-n_out // core.lane)
+    sat = apply_stuck(core, FaultPlan(seed=3, stuck_groups=2), n_out=n_out)
+    assert len(sat) == 2 and all(g < readout_span for g in sat)
+    assert all(np.all(core.thr[g, :] == np.iinfo(np.int32).min) for g in sat)
+    core2 = GroupedNeuronCore.from_artifact(art, PYNQ_COST)
+    sil = apply_stuck(core2, FaultPlan(seed=3, stuck_groups=1,
+                                       stuck_mode="silent"), n_out=n_out)
+    assert all(np.all(core2.thr[g, :] == INT32_NEVER_FIRE) for g in sil)
+    with pytest.raises(ValueError, match="stuck_mode"):
+        apply_stuck(core2, FaultPlan(stuck_groups=1, stuck_mode="wedged"))
+    assert apply_stuck(core2, FaultPlan.none()) == []
+
+
+def test_trace_detector_catches_aer_glitches(fuzz0):
+    art, images = fuzz0.artifact, fuzz0.images[:3]
+    clean = make_runtime(art, "board-py")
+    clean.forward(images)
+    assert trace_errors(clean, images) == []
+    glitched = make_runtime(art, "board-py", faults="aer_drop=0.3,seed=4")
+    glitched.forward(images)
+    errs = trace_errors(glitched, images)
+    assert errs and any("histogram" in e for e in errs)
+
+
+# -------------------------------------------------------------------- canary
+def test_canary_probes_detect_stuck_group(trained_artifact):
+    art, _, (xte, _) = trained_artifact
+    canary = Canary.from_artifact(art, pool=xte[:64])
+    assert len(canary.covered_groups) >= 2      # detection needs >=2 labels
+    assert canary.mismatches(canary.want) == []
+    flipped = np.array(canary.want)
+    flipped[0] = (flipped[0] + 1) % canary.n_groups
+    assert canary.mismatches(flipped)
+    # a saturated stuck group really moves a probe label through board-py
+    rt = make_runtime(art, "board-py", faults="stuck=1,seed=5")
+    got = rt.forward(canary.images).labels
+    assert canary.mismatches(got)
+
+
+# ------------------------------------------------------- clean-plan guarantee
+def test_clean_plan_board_py_bitexact_with_golden(fuzz0):
+    """``FaultPlan.none()`` keeps every injection hook inert: board-py under
+    the clean plan matches both the unfaulted runtime AND the committed
+    PR 4 golden snapshot, outputs and cost account alike."""
+    art, images = fuzz0.artifact, fuzz0.images[:5]
+    plain = make_runtime(art, "board-py")
+    hooked = make_runtime(art, "board-py", faults=FaultPlan.none())
+    out_p, out_h = plain.forward(images), hooked.forward(images)
+    for f in ("labels", "first_spike", "v_final", "steps"):
+        assert np.array_equal(getattr(out_p, f), getattr(out_h, f)), f
+    import dataclasses
+    for f in dataclasses.fields(plain.last_trace):
+        assert np.array_equal(np.asarray(getattr(plain.last_trace, f.name)),
+                              np.asarray(getattr(hooked.last_trace, f.name)))
+    with np.load(golden_path(0)) as z:
+        assert np.array_equal(out_h.labels, z["labels"][:5])
+        assert np.array_equal(out_h.first_spike, z["first_spike"][:5])
+        assert np.array_equal(
+            np.asarray(hooked.last_trace.cycles), z["board_cycles"][:5])
+        assert np.array_equal(
+            np.asarray(hooked.last_trace.energy_nj),
+            z["board_energy_nj"][:5])
+
+
+def test_clean_plan_static_sites_inert(fuzz0):
+    art = fuzz0.artifact
+    meta_before = copy.deepcopy(art.meta)
+    rt = make_runtime(art, "reference", faults=FaultPlan.none())
+    assert rt.art is art                        # no clone for a clean plan
+    assert art.meta == meta_before

@@ -1,0 +1,226 @@
+"""Serving-tier resilience: the lane health state machine end to end —
+detection (checksum / canary / trace / ECC / watchdog), bounded retry with
+requeue, scrub/rebuild recovery, quarantine, and circuit-breaker degradation
+to the dense fallback. Every scenario asserts the subsystem's invariant:
+each admitted request completes with a reference-bit-exact label or an
+explicit error — never silently wrong, never hung."""
+
+import numpy as np
+import pytest
+
+from repro.core.reference import SNNReference
+from repro.faults import FaultPlan
+from repro.serving.scheduler import ServingError, ServingScheduler
+from repro.serving.snn_engine import SNNServeEngine
+
+
+def _want(art, images):
+    return np.asarray(SNNReference(art).forward(images).labels)
+
+
+def _serve_all(sched, images):
+    rids = [sched.submit(x) for x in images]
+    done = sched.drain()
+    return np.asarray([done[r].label for r in rids]), done, rids
+
+
+# ----------------------------------------------------------- crash + retry
+def test_lane_crash_retries_to_bitexact_labels(trained_artifact):
+    """An injected lane crash requeues its batch; after the scrub/rebuild
+    every label is still bit-exact and the ledger shows the round trip."""
+    art, _, (xte, _) = trained_artifact
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=1, max_batch=8, max_wait_us=500.0,
+                          faults="crash=0,seed=3",
+                          resilience={"backoff_s": 0.001}) as s:
+        got, done, rids = _serve_all(s, xte[:24])
+        st = s.stats()
+    assert np.array_equal(got, _want(art, xte[:24]))
+    assert all(done[r].error is None for r in rids)
+    assert st["lane_faults"] >= 1 and st["requeued"] >= 1
+    assert st["lane_restarts"] >= 1 and st["recoveries"] >= 1
+    assert st["errors"] == 0 and st["recovery_ms_mean"] > 0
+    assert any(done[r].attempts > 0 for r in rids)   # retries really happened
+
+
+def test_startup_seu_scrubbed_before_service(trained_artifact):
+    """A transient SEU in the lane's BRAM image fails the commission-time
+    checksum; the rebuilt lane serves bit-exact with zero request impact."""
+    art, _, (xte, _) = trained_artifact
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=1, max_batch=8, max_wait_us=500.0,
+                          faults="seu_weight=4,seed=5",
+                          resilience={"backoff_s": 0.001}) as s:
+        got, done, rids = _serve_all(s, xte[:16])
+        st = s.stats()
+    assert np.array_equal(got, _want(art, xte[:16]))
+    assert st["integrity_failures"] >= 1 and st["lane_restarts"] >= 1
+    assert st["errors"] == 0
+    assert all(not done[r].fallback_dense for r in rids)  # healthy event path
+
+
+# ---------------------------------------------------------------- watchdog
+def test_watchdog_replaces_hung_lane(trained_artifact):
+    art, _, (xte, _) = trained_artifact
+    plan = FaultPlan(seed=7, hang_batches=(0,), hang_s=1.5)
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=1, max_batch=4, max_wait_us=500.0,
+                          faults=plan,
+                          resilience={"watchdog_s": 0.2,
+                                      "backoff_s": 0.001}) as s:
+        got, done, rids = _serve_all(s, xte[:12])
+        st = s.stats()
+    assert np.array_equal(got, _want(art, xte[:12]))
+    assert st["watchdog_timeouts"] >= 1 and st["requeued"] >= 1
+    assert st["lane_restarts"] >= 1 and st["errors"] == 0
+
+
+# --------------------------------------------------- quarantine + breaker
+def test_persistent_seu_quarantines_and_degrades(trained_artifact):
+    """A fault the scrub cannot clear: commission fails twice, the lane is
+    quarantined and circuit-broken onto the dense fallback — every request
+    still served, bit-exact, flagged as fallback traffic."""
+    art, _, (xte, _) = trained_artifact
+    faults = {"seu_weight_flips": 4, "persistent": True, "seed": 9}
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=1, max_batch=8, max_wait_us=500.0,
+                          faults=faults,
+                          resilience={"backoff_s": 0.001}) as s:
+        got, done, rids = _serve_all(s, xte[:16])
+        st = s.stats()
+    assert np.array_equal(got, _want(art, xte[:16]))
+    assert st["quarantines"] >= 1 and st["breaker_degraded"] >= 1
+    assert st["errors"] == 0
+    assert all(done[r].fallback_dense for r in rids)
+    assert "degraded" in st["lane_health"]
+
+
+def test_persistent_seu_without_degrade_refuses_admission(trained_artifact):
+    art, _, (xte, _) = trained_artifact
+    faults = {"seu_weight_flips": 4, "persistent": True, "seed": 9}
+    s = ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                         workers=1, max_batch=8, max_wait_us=500.0,
+                         faults=faults,
+                         resilience={"backoff_s": 0.001, "degrade": False})
+    try:
+        with pytest.raises(RuntimeError, match="quarantined"):
+            s.submit(xte[0])
+        assert s.stats()["quarantines"] >= 1
+    finally:
+        s.close()
+
+
+def test_circuit_breaker_stops_crash_flapping(trained_artifact):
+    """A persistent crash-at-batch-0 plan re-fires on every rebuilt lane;
+    the breaker must stop the flapping by degrading to the dense path, and
+    every request must still complete correctly."""
+    art, _, (xte, _) = trained_artifact
+    plan = FaultPlan(seed=11, crash_batches=(0,), persistent=True)
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=1, max_batch=8, max_wait_us=500.0,
+                          faults=plan,
+                          resilience={"backoff_s": 0.001, "max_retries": 4,
+                                      "breaker_threshold": 2}) as s:
+        got, done, rids = _serve_all(s, xte[:16])
+        st = s.stats()
+    assert np.array_equal(got, _want(art, xte[:16]))
+    assert st["breaker_degraded"] >= 1 and st["errors"] == 0
+    assert any(done[r].fallback_dense for r in rids)   # post-breaker traffic
+
+
+# ----------------------------------------------- mid-flight board detectors
+def test_stuck_group_caught_by_canary_mid_flight(trained_artifact):
+    """startup_checks=False lets a stuck-at lane into service; the per-batch
+    canary probes catch it, the batch is requeued, and the rebuilt lane
+    serves every label bit-exact."""
+    art, _, (xte, _) = trained_artifact
+    with ServingScheduler(art, spec="board-py", workers=1, max_batch=2,
+                          max_wait_us=500.0, faults="stuck=1,seed=13",
+                          canary_pool=xte[:32],
+                          resilience={"startup_checks": False, "verify": True,
+                                      "canary_every": 1,
+                                      "backoff_s": 0.001}) as s:
+        got, done, rids = _serve_all(s, xte[:4])
+        st = s.stats()
+    assert np.array_equal(got, _want(art, xte[:4]))
+    assert st["canary_failures"] >= 1 and st["lane_faults"] >= 1
+    assert st["lane_restarts"] >= 1 and st["errors"] == 0
+
+
+def test_membrane_seu_caught_by_ecc_mid_flight(trained_artifact):
+    art, _, (xte, _) = trained_artifact
+    with ServingScheduler(art, spec="board-py", workers=1, max_batch=2,
+                          max_wait_us=500.0, faults="membrane=0.9,seed=15",
+                          resilience={"startup_checks": False, "verify": True,
+                                      "backoff_s": 0.001}) as s:
+        got, done, rids = _serve_all(s, xte[:4])
+        st = s.stats()
+    assert np.array_equal(got, _want(art, xte[:4]))
+    assert st["ecc_detected"] >= 1 and st["lane_restarts"] >= 1
+    assert st["errors"] == 0
+
+
+# --------------------------------------------------------- close semantics
+def test_context_exit_completes_every_admitted_request(trained_artifact):
+    """Satellite: close() with queued/in-flight requests must not drop them
+    silently — exiting the context completes EVERY admitted request, each
+    with a label or an explicit 'scheduler closed' error."""
+    art, _, (xte, _) = trained_artifact
+    with ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                          workers=1, max_batch=4,
+                          max_wait_us=10_000_000.0) as s:
+        rids = [s.submit(x) for x in xte[:32]]
+        # exit immediately: a huge deadline means most of these are queued
+    done = s.drain()
+    assert sorted(done) == rids
+    for r in rids:
+        req = done[r]
+        assert (req.label is not None) or (req.error == "scheduler closed")
+    with pytest.raises(RuntimeError, match="closed"):
+        s.submit(xte[0])
+
+
+def test_close_drain_serves_backlog_first(trained_artifact):
+    art, _, (xte, _) = trained_artifact
+    s = ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                         workers=1, max_batch=4, max_wait_us=500.0)
+    rids = [s.submit(x) for x in xte[:20]]
+    s.close(drain=True)
+    done = s.drain()
+    got = np.asarray([done[r].label for r in rids])
+    assert np.array_equal(got, _want(art, xte[:20]))
+    assert all(done[r].error is None for r in rids)
+    assert s.stats()["errors"] == 0
+
+
+# ------------------------------------------------------------ engine facade
+def test_engine_classify_through_crash_recovery(trained_artifact):
+    art, _, (xte, _) = trained_artifact
+    eng = SNNServeEngine(art, backend="accelerator", max_batch=8, workers=1,
+                         faults="crash=0,seed=17",
+                         resilience={"backoff_s": 0.001})
+    try:
+        got = eng.classify(xte[:16])
+        st = eng.stats()
+    finally:
+        eng.close()
+    assert np.array_equal(got, _want(art, xte[:16]))
+    assert st["lane_faults"] >= 1 and st["errors"] == 0
+
+
+def test_engine_classify_raises_serving_error_on_gave_up(trained_artifact):
+    """classify() must never fabricate a label for a failed request: when
+    retries are exhausted it raises ServingError naming the request."""
+    art, _, (xte, _) = trained_artifact
+
+    def boom(images, k, probe=False):
+        raise RuntimeError("lane keeps dying")
+
+    eng = SNNServeEngine(art, backend="accelerator", max_batch=4, workers=1,
+                         resilience={"max_retries": 0, "backoff_s": 0.001})
+    try:
+        eng.sched.lanes[0].serve = boom
+        with pytest.raises(ServingError, match="lane keeps dying"):
+            eng.classify(xte[:2])
+    finally:
+        eng.close()

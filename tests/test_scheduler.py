@@ -11,7 +11,7 @@ import pytest
 
 from repro.core.artifact import Artifact
 from repro.core.reference import SNNReference
-from repro.serving.scheduler import ServingScheduler
+from repro.serving.scheduler import ServingError, ServingScheduler
 
 
 def _tiny_emax_artifact(art: Artifact, e_max: int = 8) -> Artifact:
@@ -128,27 +128,53 @@ def test_board_accounting_and_denominators(trained_artifact):
     assert st["overflow_fallbacks"] == 0   # board backpressures, never drops
 
 
+def test_malformed_image_rejected_at_admission(trained_artifact):
+    """A bad shape must never reach a lane where it would poison a whole
+    batch — submit() rejects it synchronously."""
+    art, _, _ = trained_artifact
+    s = ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                         max_batch=4)
+    with pytest.raises(ValueError, match="shape"):
+        s.submit(np.zeros(3, np.float32))      # wrong width: (3,) vs (N_in,)
+    assert s.drain() == {}                     # nothing was admitted
+
+
 def test_failed_batch_never_strands_waiters(trained_artifact):
-    """A serving failure must complete the batch with .error set and release
-    _pending — drain()/result() must not hang, and later traffic must still
-    be served. Inline mode re-raises to the synchronous caller."""
+    """A worker-lane exception mid-batch must not vanish: the request
+    completes with .error set, result() raises a descriptive ServingError,
+    drain()/result() never hang, and later traffic is still served (the
+    lane is scrubbed and rebuilt). Inline mode re-raises to the synchronous
+    caller after error-completing the batch."""
     art, _, (xte, _) = trained_artifact
-    bad = np.zeros(3, np.float32)              # wrong width: (3,) vs (N_in,)
+
+    def boom(images, k, probe=False):
+        raise RuntimeError("injected mid-batch explosion")
+
     with ServingScheduler(art, spec="accelerator-event", kernel="fused",
-                          workers=1, max_batch=4, max_wait_us=500.0) as s:
-        rid = s.submit(bad)
-        req = s.result(rid, timeout=120.0)     # completes instead of hanging
-        assert req.error is not None and req.label is None
-        assert s.stats()["errors"] == 1
-        ok = s.result(s.submit(xte[0]), timeout=120.0)   # lane survived
+                          workers=1, max_batch=4, max_wait_us=500.0,
+                          resilience={"max_retries": 0, "backoff_s": 0.001},
+                          ) as s:
+        s.lanes[0].serve = boom                # this lane throws mid-batch
+        rid = s.submit(xte[0])
+        with pytest.raises(ServingError, match="explosion") as ei:
+            s.result(rid, timeout=120.0)       # raises instead of hanging
+        req = ei.value.request
+        assert req.rid == rid and req.label is None
+        assert "injected mid-batch explosion" in req.error
+        st = s.stats()
+        assert st["errors"] == 1 and st["lane_faults"] >= 1
+        ok = s.result(s.submit(xte[0]), timeout=120.0)   # rebuilt lane serves
         assert ok.error is None and ok.label is not None
+        assert s.stats()["lane_restarts"] >= 1
 
     s2 = ServingScheduler(art, spec="accelerator-event", kernel="fused",
                           max_batch=4)
-    s2.submit(bad)
-    with pytest.raises(ValueError):            # inline mode surfaces it
-        s2.drain()
-    assert s2.drain() != {} or s2.stats()["errors"] == 1   # nothing stranded
+    s2.lanes[0].serve = boom
+    rid2 = s2.submit(xte[0])
+    with pytest.raises(RuntimeError, match="explosion"):
+        s2.drain()                             # inline mode surfaces it
+    done = s2.drain()                          # ...but nothing is stranded
+    assert done[rid2].error is not None and s2.stats()["errors"] == 1
 
 
 def test_drain_does_not_steal_claimed_result(trained_artifact):
