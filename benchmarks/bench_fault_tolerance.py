@@ -16,8 +16,12 @@ slowdown) and measures what the resilience machinery actually delivers:
 expected detection/recovery counters, or (for the clean baseline) shows any
 fault activity at all. Violating cases are dumped to
 ``results/fault_failures/`` (JSON report per case) so chaos regressions are
-reproducible from the seed. Emits ``results/bench/fault_tolerance.json``
-(schema-validated).
+reproducible from the seed. ``--trace-out DIR`` runs every case under a
+fresh telemetry ``Tracer``, attaches a ``telemetry`` block to each row, and
+writes ``<name>.trace.jsonl`` into DIR for violating cases — the span tree
+(request → batch → lane → detector firings → requeues) sits alongside the
+JSON verdict so the failure's causal history is in the same place as its
+report. Emits ``results/bench/fault_tolerance.json`` (schema-validated).
 """
 
 from __future__ import annotations
@@ -35,6 +39,9 @@ from benchmarks import common as CM
 from repro.core.reference import SNNReference
 from repro.faults.plan import FaultPlan
 from repro.serving.scheduler import ServingScheduler
+from repro.telemetry import export as texport
+from repro.telemetry import trace as ttrace
+from repro.telemetry.trace import Tracer
 
 FAIL_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                         "fault_failures")
@@ -113,26 +120,35 @@ def _cases(quick: bool) -> list[dict]:
     return cases
 
 
-def _run_case(case: dict, art, pool: np.ndarray, want: np.ndarray) -> dict:
+def _run_case(case: dict, art, pool: np.ndarray, want: np.ndarray,
+              traced: bool = False) -> dict:
     """Serve one chaos case end to end; returns the verdict + measurements.
     The invariant check is strict: every rid must come back, and a request
-    may be wrong ONLY by being explicitly errored."""
+    may be wrong ONLY by being explicitly errored. With ``traced``, the case
+    runs under its own fresh Tracer (kept on the verdict under ``_tracer``,
+    stripped before JSON dumps)."""
     res = {"backoff_s": 0.002}
     if case.get("verify"):
         res["verify"] = True
     if case.get("watchdog_s"):
         res["watchdog_s"] = case["watchdog_s"]
     n = case["n"]
+    tracer = Tracer() if traced else None
+    prev = ttrace.install(tracer) if tracer else None
     t0 = time.perf_counter()
-    sched = ServingScheduler(
-        art, spec=case["spec"], kernel=case.get("kernel"), workers=1,
-        max_batch=case["mb"], max_wait_us=500.0, faults=case["faults"],
-        resilience=res,
-        canary_pool=pool[:32] if case.get("canary") else None)
-    with sched:
-        rids = [sched.submit(pool[i % len(pool)]) for i in range(n)]
-        done = sched.drain()
-        st = sched.stats()
+    try:
+        sched = ServingScheduler(
+            art, spec=case["spec"], kernel=case.get("kernel"), workers=1,
+            max_batch=case["mb"], max_wait_us=500.0, faults=case["faults"],
+            resilience=res,
+            canary_pool=pool[:32] if case.get("canary") else None)
+        with sched:
+            rids = [sched.submit(pool[i % len(pool)]) for i in range(n)]
+            done = sched.drain()
+            st = sched.stats()
+    finally:
+        if tracer is not None:
+            ttrace.install(prev)
     wall = time.perf_counter() - t0
 
     problems: list[str] = []
@@ -177,7 +193,7 @@ def _run_case(case: dict, art, pool: np.ndarray, want: np.ndarray) -> dict:
                         f"(board_stalls={st.get('board_stalls', 0)})")
 
     plan = FaultPlan.coerce(case["faults"])
-    return {
+    verdict = {
         "name": case["name"], "spec": case["spec"],
         "plan": plan.describe() if plan is not None else "none",
         "faulty": bool(case.get("faulty", True)),
@@ -186,24 +202,32 @@ def _run_case(case: dict, art, pool: np.ndarray, want: np.ndarray) -> dict:
         "detected": bool(detected), "detectors_fired": sorted(detected),
         "problems": problems,
     }
+    if tracer is not None:
+        verdict["telemetry"] = {"span_count": len(tracer.spans),
+                                "dropped_spans": tracer.dropped}
+        verdict["_tracer"] = tracer
+    return verdict
 
 
 def _dump_failure(verdict: dict) -> str:
     os.makedirs(FAIL_DIR, exist_ok=True)
     path = os.path.join(FAIL_DIR, f"{verdict['name']}.json")
+    clean = {k: v for k, v in verdict.items() if not k.startswith("_")}
     with open(path, "w") as f:
-        json.dump(verdict, f, indent=1, default=float)
+        json.dump(clean, f, indent=1, default=float)
     return path
 
 
-def main(quick: bool = False, check: bool = False) -> int:
+def main(quick: bool = False, check: bool = False,
+         trace_out: str | None = None) -> int:
     art, xte, yte = CM.get_artifact_and_data(quick=quick)
     pool = xte[:64]
     want = np.asarray(SNNReference(art).forward(pool).labels)
     if os.path.isdir(FAIL_DIR):         # stale repros must not mask a green run
         shutil.rmtree(FAIL_DIR)
 
-    verdicts = [_run_case(c, art, pool, want) for c in _cases(quick)]
+    verdicts = [_run_case(c, art, pool, want, traced=bool(trace_out))
+                for c in _cases(quick)]
 
     rows, failures = [], []
     faulty = [v for v in verdicts if v["faulty"]]
@@ -230,9 +254,17 @@ def main(quick: bool = False, check: bool = False) -> int:
             "watchdog_timeouts": st["watchdog_timeouts"],
             "invariant_ok_pct": 0.0 if v["problems"] else 100.0,
         })
+        if "telemetry" in v:
+            rows[-1]["telemetry"] = v["telemetry"]
         if v["problems"]:
             failures.append(v)
             _dump_failure(v)
+            if trace_out and "_tracer" in v:
+                path = os.path.join(trace_out,
+                                    f"{v['name']}.trace.jsonl")
+                n_spans = texport.write_jsonl(v["_tracer"], path)
+                print(f"trace for failing case {v['name']!r} dumped to "
+                      f"{path} ({n_spans} spans)", file=sys.stderr)
     det_rate = (100.0 * sum(v["detected"] for v in faulty) / len(faulty)
                 if faulty else 0.0)
     rows.append({
@@ -279,5 +311,8 @@ if __name__ == "__main__":
                     help="exit 1 if any case violates the detected-or-"
                          "correct invariant or misses its expected "
                          "detection/recovery counters")
+    ap.add_argument("--trace-out", default=None, metavar="DIR",
+                    help="record telemetry span trees per case and dump "
+                         "JSONL traces for violating cases into DIR")
     a = ap.parse_args()
-    sys.exit(main(quick=a.quick, check=a.check))
+    sys.exit(main(quick=a.quick, check=a.check, trace_out=a.trace_out))

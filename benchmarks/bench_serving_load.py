@@ -20,12 +20,20 @@ padding, lane count, and the overflow reroute must not change a single
 answer (the paper's single-artifact discipline, extended to the serving
 tier).
 
+``--trace-out DIR`` runs every scenario under a fresh telemetry ``Tracer``
+(request/batch span trees from the scheduler down through the runtimes),
+attaches a ``telemetry`` block to each row, and dumps the full span tree as
+``serving_<spec>_w<workers>.trace.jsonl`` into DIR for any scenario whose
+labels are NOT bit-exact — the trace shows exactly which lane/batch served
+the bad answer.
+
 Emits ``results/bench/serving_load.json`` (schema-validated).
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import threading
 import time
@@ -35,6 +43,9 @@ import numpy as np
 from benchmarks import common as CM
 from repro.core.reference import SNNReference
 from repro.serving.scheduler import ServingError, ServingScheduler
+from repro.telemetry import export as texport
+from repro.telemetry import trace as ttrace
+from repro.telemetry.trace import Tracer
 
 SPECS = ("accelerator-event-fused", "board-batched")
 WORKER_COUNTS = (1, 2)
@@ -136,7 +147,8 @@ def _row(spec: str, load: str, workers: int, n: int, wall: float,
     return row
 
 
-def main(quick: bool = False, check: bool = False) -> int:
+def main(quick: bool = False, check: bool = False,
+         trace_out: str | None = None) -> int:
     art, xte, yte = CM.get_artifact_and_data(quick=quick)
     n = 128 if quick else 512
     pool = xte[:min(len(xte), 256)]
@@ -146,44 +158,66 @@ def main(quick: bool = False, check: bool = False) -> int:
     rows, ok = [], True
     for spec in SPECS:
         for workers in WORKER_COUNTS:
-            sched = ServingScheduler(art, spec=spec, workers=workers,
-                                     max_batch=MAX_BATCH,
-                                     max_wait_us=MAX_WAIT_US)
-            with sched:
-                # calibrate: one full batch warms every lane's compiled
-                # program; a second timed one measures steady-state service
-                for _ in range(max(2, workers)):
+            tracer = Tracer() if trace_out else None
+            prev = ttrace.install(tracer) if tracer else None
+            scenario_exact = True
+            try:
+                sched = ServingScheduler(art, spec=spec, workers=workers,
+                                         max_batch=MAX_BATCH,
+                                         max_wait_us=MAX_WAIT_US)
+                with sched:
+                    # calibrate: one full batch warms every lane's compiled
+                    # program; a second timed one measures steady-state
+                    # service
+                    for _ in range(max(2, workers)):
+                        for i in range(MAX_BATCH):
+                            sched.submit(pool[i])
+                        sched.drain()
+                    t0 = time.perf_counter()
                     for i in range(MAX_BATCH):
                         sched.submit(pool[i])
                     sched.drain()
-                t0 = time.perf_counter()
-                for i in range(MAX_BATCH):
-                    sched.submit(pool[i])
-                sched.drain()
-                t_batch = time.perf_counter() - t0
-                # offer ~70% of one lane's measured capacity per worker:
-                # under saturation (drain terminates fast) but bursty enough
-                # that batches actually fill
-                rate = 0.7 * workers * MAX_BATCH / max(t_batch, 1e-6)
+                    t_batch = time.perf_counter() - t0
+                    # offer ~70% of one lane's measured capacity per worker:
+                    # under saturation (drain terminates fast) but bursty
+                    # enough that batches actually fill
+                    rate = 0.7 * workers * MAX_BATCH / max(t_batch, 1e-6)
 
-                sched.reset_stats()
-                served, wall = _poisson_open_loop(sched, pool, n, rate,
-                                                  seed=0)
-                exact = _labels_exact(
-                    [(i, r) for i, r in enumerate(served)], want, len(pool))
-                ok &= exact
-                rows.append(_row(spec, "open-loop-poisson", workers, n, wall,
-                                 sched.stats(), exact,
-                                 {"offered_rate_img_per_s": rate}))
+                    sched.reset_stats()
+                    served, wall = _poisson_open_loop(sched, pool, n, rate,
+                                                      seed=0)
+                    exact = _labels_exact(
+                        [(i, r) for i, r in enumerate(served)], want,
+                        len(pool))
+                    ok &= exact
+                    scenario_exact &= exact
+                    rows.append(_row(spec, "open-loop-poisson", workers, n,
+                                     wall, sched.stats(), exact,
+                                     {"offered_rate_img_per_s": rate}))
 
-                sched.reset_stats()
-                results, wall = _closed_loop(sched, pool, n, clients)
-                exact = (len(results) == n
-                         and _labels_exact(results, want, len(pool)))
-                ok &= exact
-                rows.append(_row(spec, "closed-loop", workers, n, wall,
-                                 sched.stats(), exact,
-                                 {"clients": clients}))
+                    sched.reset_stats()
+                    results, wall = _closed_loop(sched, pool, n, clients)
+                    exact = (len(results) == n
+                             and _labels_exact(results, want, len(pool)))
+                    ok &= exact
+                    scenario_exact &= exact
+                    rows.append(_row(spec, "closed-loop", workers, n, wall,
+                                     sched.stats(), exact,
+                                     {"clients": clients}))
+            finally:
+                if tracer is not None:
+                    ttrace.install(prev)
+            if tracer is not None:
+                tele = {"span_count": len(tracer.spans),
+                        "dropped_spans": tracer.dropped}
+                rows[-1]["telemetry"] = dict(tele)
+                rows[-2]["telemetry"] = dict(tele)
+                if not scenario_exact:
+                    path = os.path.join(
+                        trace_out, f"serving_{spec}_w{workers}.trace.jsonl")
+                    n_spans = texport.write_jsonl(tracer, path)
+                    print(f"trace for non-exact scenario dumped to {path} "
+                          f"({n_spans} spans)", file=sys.stderr)
     CM.emit("serving_load", rows)
 
     for r in rows:
@@ -217,5 +251,8 @@ if __name__ == "__main__":
     ap.add_argument("--check", action="store_true",
                     help="exit 1 unless every served label matches the "
                          "software reference bit-exactly")
+    ap.add_argument("--trace-out", default=None, metavar="DIR",
+                    help="record telemetry span trees per scenario and dump "
+                         "JSONL traces for non-bit-exact scenarios into DIR")
     a = ap.parse_args()
-    sys.exit(main(quick=a.quick, check=a.check))
+    sys.exit(main(quick=a.quick, check=a.check, trace_out=a.trace_out))

@@ -14,7 +14,11 @@ validates here before writing. The contract is deliberately small:
     tokens include a unit (s, us, ms, hz, nj, pj, pct, bytes, cycles, img,
     image) — e.g. ``us_per_image``, ``energy_nj_img``, ``vmem_bytes``;
   * values are JSON scalars (or lists of them): no nested dicts, so rows
-    diff cleanly.
+    diff cleanly — with ONE structured exception: an optional ``telemetry``
+    block (``{"span_count": int, "dropped_spans": int, "overhead_pct":
+    float}``, any subset) carrying the row's tracing account. It is the
+    only nested dict the schema admits, and its keys are closed so it
+    cannot become a dumping ground.
 
 Violations raise ``SchemaError`` naming the file, row index, and reason.
 """
@@ -29,6 +33,9 @@ UNIT_TOKENS = {"s", "us", "ms", "hz", "nj", "pj", "pct", "bytes", "cycles",
 # numpy scalars are accepted — emit() serializes them via json default=float
 _SCALARS = (str, int, float, bool, type(None), np.integer, np.floating,
             np.bool_)
+# the one structured field: closed key set, numeric values only
+TELEMETRY_KEYS = {"span_count", "dropped_spans", "overhead_pct"}
+_NUMERIC = (int, float, np.integer, np.floating)
 
 
 class SchemaError(ValueError):
@@ -56,9 +63,27 @@ def validate_rows(name: str, rows) -> None:
             raise SchemaError(f"{where}: no metric field (a key with a unit "
                               f"token from {sorted(UNIT_TOKENS)})")
         for k, v in row.items():
+            if k == "telemetry":
+                _validate_telemetry(where, v)
+                continue
             ok = isinstance(v, _SCALARS) or (
                 isinstance(v, list) and all(isinstance(x, _SCALARS) for x in v))
             if not ok:
                 raise SchemaError(f"{where}: field {k!r} is not a JSON "
                                   f"scalar or list of scalars "
                                   f"({type(v).__name__})")
+
+
+def _validate_telemetry(where: str, v) -> None:
+    if not isinstance(v, dict) or not v:
+        raise SchemaError(f"{where}: 'telemetry' must be a non-empty dict "
+                          f"with keys from {sorted(TELEMETRY_KEYS)}")
+    extra = set(v) - TELEMETRY_KEYS
+    if extra:
+        raise SchemaError(f"{where}: 'telemetry' has unknown keys "
+                          f"{sorted(extra)} (allowed: "
+                          f"{sorted(TELEMETRY_KEYS)})")
+    for k, x in v.items():
+        if not isinstance(x, _NUMERIC) or isinstance(x, bool):
+            raise SchemaError(f"{where}: telemetry.{k} must be numeric, "
+                              f"got {type(x).__name__}")

@@ -15,7 +15,11 @@
 # any advertised runtime spec disagrees with the reference on ANY fuzzed
 # artifact / the pinned golden traces drift (conformance gate), OR if any
 # injected-fault chaos case violates the detected-or-correct serving
-# invariant (fault-tolerance gate).
+# invariant (fault-tolerance gate), OR if the telemetry subsystem costs
+# more than its budget (disabled < 2%, enabled < 10% — overhead gate).
+#
+# The serving and chaos gates run with --trace-out so any failing scenario
+# leaves its telemetry span tree (JSONL) next to the JSON failure report.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -30,6 +34,9 @@ fi
 
 python -m benchmarks.bench_event_pipeline --quick --check
 python -m benchmarks.bench_board_emu --quick --check
-python -m benchmarks.bench_serving_load --quick --check
+python -m benchmarks.bench_serving_load --quick --check \
+    --trace-out results/serving_failures
 python -m benchmarks.bench_conformance --quick --check
-python -m benchmarks.bench_fault_tolerance --quick --check
+python -m benchmarks.bench_fault_tolerance --quick --check \
+    --trace-out results/fault_failures
+python -m benchmarks.bench_telemetry_overhead --quick --check

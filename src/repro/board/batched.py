@@ -25,13 +25,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.board.energy import BoardTrace, account
+from repro.board.energy import BoardTrace, account, span_attrs
 from repro.core import ttfs
 from repro.core.artifact import Artifact
 from repro.core.events import _step_counts
 from repro.core.hw import BoardCostModel, PYNQ_COST
 from repro.core.lif_dynamics import lif_scan
 from repro.core.reference import SNNOutput
+from repro.telemetry import trace as ttrace
 
 
 class SNNBoardBatched:
@@ -120,9 +121,25 @@ class SNNBoardBatched:
 
     # ------------------------------------------------------------- host front
     def forward(self, images) -> SNNOutput:
+        # telemetry: same canonical span tree as the per-image scheduler
+        # (board.forward -> encode / run [/ image x B] / decode) — decode is
+        # fused into the jitted core here, so its span is a zero-wall marker;
+        # the canonical form (names, scopes, logical-clock attrs) is
+        # bit-identical because both paths project the same trace account
+        rec = ttrace.get()
         images = np.atleast_2d(np.asarray(images, np.float32))
+        fwd = rec.begin("board.forward", "system",
+                        attrs={"batch": int(images.shape[0]), "T": self.T},
+                        meta={"impl": "board-batched"}) if rec.enabled else None
+        enc = rec.begin("board.encode", "system", trace=fwd.trace,
+                        parent=fwd.sid,
+                        attrs={"n_in": int(images.shape[1])}) \
+            if fwd is not None else None
         times = np.asarray(ttfs.encode_ttfs(jnp.asarray(images), self.T,
                                             self.x_min))
+        rec.end(enc)
+        run = rec.begin("board.run", "accel", trace=fwd.trace,
+                        parent=fwd.sid) if fwd is not None else None
         labels, first_l, v_l, steps = self._core(jnp.asarray(times))
         steps_np = np.asarray(steps, np.int64)
         counts = _step_counts(times, self.T)[:, :self.T].astype(np.int64)
@@ -135,6 +152,15 @@ class SNNBoardBatched:
         idx = np.arange(counts.shape[0])
         self.last_trace = account(cum[idx, steps_np], steps_np,
                                   cum_x[idx, steps_np], self.n_pad, self.cost)
+        if run is not None:
+            totals, per = span_attrs(self.last_trace)
+            rec.end(run, attrs=totals)
+            for a in per:
+                rec.emit("board.image", "accel", trace=run.trace,
+                         parent=run.sid, attrs=a)
+            rec.emit("board.decode", "accel", trace=fwd.trace,
+                     parent=fwd.sid, attrs={"n_out": self.n_out})
+        rec.end(fwd)
         return SNNOutput(labels=labels, first_spike=first_l, v_final=v_l,
                          steps=steps)
 

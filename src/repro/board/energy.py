@@ -70,6 +70,29 @@ def account(events, ticks, stalls, n_pad: int,
                       energy_nj=np.asarray(energy_nj, np.float64))
 
 
+def span_attrs(trace: BoardTrace) -> tuple[dict, list[dict]]:
+    """Project a (B,)-array trace into telemetry span attributes: the
+    ``board.run`` totals and one ``board.image`` attr dict per image. All
+    values are logical clocks (cost-model integers + the derived energy
+    float), so the spans are deterministic for a seeded run — the per-image
+    scheduler and the batched fast path produce bit-identical attrs because
+    their traces are bit-identical (the conformance suite's guarantee)."""
+    ticks = np.atleast_1d(np.asarray(trace.ticks, np.int64))
+    events = np.atleast_1d(np.asarray(trace.events, np.int64))
+    stalls = np.atleast_1d(np.asarray(trace.stalls, np.int64))
+    synops = np.atleast_1d(np.asarray(trace.synops, np.int64))
+    cycles = np.atleast_1d(np.asarray(trace.cycles, np.int64))
+    energy = np.atleast_1d(np.asarray(trace.energy_nj, np.float64))
+    totals = {"events": int(events.sum()), "ticks": int(ticks.sum()),
+              "stalls": int(stalls.sum()), "synops": int(synops.sum()),
+              "cycles": int(cycles.sum()), "energy_nj": float(energy.sum())}
+    per = [{"i": i, "events": int(events[i]), "ticks": int(ticks[i]),
+            "stalls": int(stalls[i]), "synops": int(synops[i]),
+            "cycles": int(cycles[i]), "energy_nj": float(energy[i])}
+           for i in range(len(cycles))]
+    return totals, per
+
+
 def stack_traces(traces: list[BoardTrace]) -> BoardTrace:
     """Stack per-image scalar traces into one (B,)-array trace."""
     return BoardTrace(*(np.stack([np.asarray(getattr(tr, f.name))

@@ -24,13 +24,14 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.board.energy import BoardTrace, account, stack_traces
+from repro.board.energy import BoardTrace, account, span_attrs, stack_traces
 from repro.board.event_queue import AEREventQueue
 from repro.board.neuron_core import GroupedNeuronCore
 from repro.core import ttfs
 from repro.core.artifact import Artifact
 from repro.core.hw import BoardCostModel, PYNQ_COST
 from repro.core.reference import SNNOutput
+from repro.telemetry import trace as ttrace
 
 
 class SNNBoard:
@@ -103,9 +104,24 @@ class SNNBoard:
 
     # ------------------------------------------------------------- batch API
     def forward(self, images) -> SNNOutput:
+        # telemetry: the span tree here (board.forward -> encode / run
+        # [/ image x B] / decode, impl in META so the canonical form matches
+        # the batched fast path bit for bit) is a deterministic projection
+        # of the cost-model account — no-ops unless a Tracer is installed
+        rec = ttrace.get()
         images = np.atleast_2d(np.asarray(images, np.float32))
+        fwd = rec.begin("board.forward", "system",
+                        attrs={"batch": int(images.shape[0]), "T": self.T},
+                        meta={"impl": "board-py"}) if rec.enabled else None
+        enc = rec.begin("board.encode", "system", trace=fwd.trace,
+                        parent=fwd.sid,
+                        attrs={"n_in": int(images.shape[1])}) \
+            if fwd is not None else None
         times = np.asarray(ttfs.encode_ttfs(jnp.asarray(images), self.T,
                                             self.x_min))
+        rec.end(enc)
+        run = rec.begin("board.run", "accel", trace=fwd.trace,
+                        parent=fwd.sid) if fwd is not None else None
         firsts, vs, steps, traces = [], [], [], []
         tick_counts, eccs = [], []
         for key, row in enumerate(times):
@@ -118,14 +134,25 @@ class SNNBoard:
             eccs.append(self._last_ecc_row)
         first_l = np.stack(firsts)
         v_l = np.stack(vs)
+        self.last_trace = stack_traces(traces)
+        self.last_tick_counts = np.stack(tick_counts)
+        self.last_ecc = np.asarray(eccs, np.int64)
+        if run is not None:
+            totals, per = span_attrs(self.last_trace)
+            rec.end(run, attrs=totals)
+            for a in per:
+                rec.emit("board.image", "accel", trace=run.trace,
+                         parent=run.sid, attrs=a)
+        dec = rec.begin("board.decode", "accel", trace=fwd.trace,
+                        parent=fwd.sid, attrs={"n_out": self.n_out}) \
+            if fwd is not None else None
         labels = np.asarray(ttfs.decode_labels(
             first_l, v_l,
             n_groups=self.art.m("readout", "n_groups"),
             per_group=self.art.m("readout", "per_group"),
             sentinel=self.T, fallback=self.art.m("readout", "fallback")))
-        self.last_trace = stack_traces(traces)
-        self.last_tick_counts = np.stack(tick_counts)
-        self.last_ecc = np.asarray(eccs, np.int64)
+        rec.end(dec)
+        rec.end(fwd)
         return SNNOutput(labels=labels, first_spike=first_l, v_final=v_l,
                          steps=np.asarray(steps, np.int32))
 

@@ -25,7 +25,14 @@ the same artifact and adversarial image batch, asserting:
                   (no overflow flag on a stream the exporter sized for);
   fault-recovery— the serving tier survives one seeded recoverable lane
                   crash: every request completes with a reference-bit-exact
-                  label and the detection/requeue/restart counters agree.
+                  label and the detection/requeue/restart counters agree;
+  telemetry     — the telemetry tier itself is deterministic and honest:
+                  two seeded board runs produce bit-identical canonical span
+                  trees, the per-image python scheduler and the batched fast
+                  path produce the SAME canonical tree, every span carries a
+                  legal ``accel|system`` scope, and the span tree's cycle
+                  totals reconcile exactly with an independent re-evaluation
+                  of the ``BoardCostModel`` account.
 
 Each oracle yields an ``OracleOutcome``; a ``ConformanceReport`` aggregates
 them and renders a failure summary naming spec, oracle, and mismatch counts.
@@ -250,8 +257,95 @@ def run_case(case: FuzzedCase, specs=ADVERTISED_SPECS,
     # ---- fault recovery: serve through one seeded recoverable fault ------
     outcomes.append(_fault_recovery_oracle(case, out_ref))
 
+    # ---- telemetry: deterministic spans that reconcile with the account --
+    outcomes.append(_telemetry_oracle(case, py_slice))
+
     return ConformanceReport(seed=case.seed, notes=case.notes,
                              outcomes=outcomes)
+
+
+def _telemetry_oracle(case: FuzzedCase, py_slice: int) -> OracleOutcome:
+    """Telemetry conformance (``telemetry_consistent``): spans are part of
+    the measurement surface, so they get the same differential treatment as
+    outputs — repeatable bit for bit, implementation-independent, scoped,
+    and reconciled against the cost model they claim to project."""
+    from repro.telemetry import SCOPES, Tracer
+    from repro.telemetry import trace as ttrace
+
+    art, images, times = case.artifact, case.images, case.times
+    T = int(art.m("encode", "T"))
+    e_max = int(art.m("events", "e_max"))
+    n_pad = int(art.m("codesign", "n_pad"))
+    imgs = images[:py_slice]
+    errs: list[str] = []
+
+    def traced_run(spec: str) -> Tracer:
+        t = Tracer()
+        prev = ttrace.install(t)
+        try:
+            make_runtime(art, spec).forward(imgs)
+        finally:
+            ttrace.install(prev)
+        return t
+
+    # 1) repeatability: two seeded runs → bit-identical canonical trees
+    t1 = traced_run("board")
+    t2 = traced_run("board")
+    if t1.fingerprint() != t2.fingerprint():
+        errs.append("two identical seeded board runs produced different "
+                    "canonical span trees (nondeterminism in a canonical "
+                    "field — wall clocks/meta belong elsewhere)")
+
+    # 2) implementation independence: the per-image python scheduler and the
+    #    vectorized fast path must project the SAME canonical tree
+    tp = traced_run("board-py")
+    if t1.canonical() != tp.canonical():
+        a, b = t1.canonical(), tp.canonical()
+        bad = next((i for i, (x, y) in enumerate(zip(a, b)) if x != y),
+                   min(len(a), len(b)))
+        errs.append(f"board-batched and board-py canonical span trees "
+                    f"diverge at span {bad} "
+                    f"({len(a)} vs {len(b)} spans)")
+
+    # 3) every span carries a legal scope tag
+    bad_scope = [s.name for s in t1.sorted_spans() if s.scope not in SCOPES]
+    if bad_scope:
+        errs.append(f"spans with illegal scope: {bad_scope[:4]}")
+
+    # 4) logical clocks reconcile: per-image span cycles == an independent
+    #    re-evaluation of the BoardCostModel from the AER queue's own counts
+    cost = make_runtime(art, "board").cost
+    valid = np.asarray([int(np.sum(times[b] < T)) for b in range(len(imgs))],
+                       np.int64)
+    stalls = np.zeros(len(imgs), np.int64)
+    for b in range(len(imgs)):
+        q = AEREventQueue(times[b], T, e_max)
+        stalls[b] = int(sum(q.stalls_at(t) for t in range(T)))
+    expect = account(valid, np.full(len(imgs), T, np.int64), stalls, n_pad,
+                     cost)
+    img_spans = sorted(t1.find("board.image"),
+                       key=lambda s: s.attrs.get("i", -1))
+    if len(img_spans) != len(imgs):
+        errs.append(f"{len(img_spans)} board.image spans for "
+                    f"{len(imgs)} images")
+    else:
+        span_cycles = np.asarray([s.attrs["cycles"] for s in img_spans],
+                                 np.int64)
+        if not np.array_equal(span_cycles, np.asarray(expect.cycles)):
+            errs.append(f"span cycle accounts diverge from the independent "
+                        f"cost-model evaluation (spans "
+                        f"{span_cycles.tolist()}, model "
+                        f"{np.asarray(expect.cycles).tolist()})")
+        runs = t1.find("board.run")
+        tot = int(np.sum(np.asarray(expect.cycles)))
+        if len(runs) != 1 or int(runs[0].attrs.get("cycles", -1)) != tot:
+            errs.append(f"board.run cycle total != sum of per-image "
+                        f"accounts ({runs[0].attrs.get('cycles') if runs else None} "
+                        f"vs {tot})")
+    return OracleOutcome(
+        "telemetry", "board", not errs, "; ".join(errs),
+        {"spans": len(t1.sorted_spans()), "fingerprint_stable":
+         int(t1.fingerprint() == t2.fingerprint())})
 
 
 def _fault_recovery_oracle(case: FuzzedCase, out_ref) -> OracleOutcome:

@@ -33,6 +33,7 @@ from __future__ import annotations
 from typing import Callable
 
 from repro.core.artifact import Artifact
+from repro.telemetry import trace as ttrace
 
 _REGISTRY: dict[str, Callable] = {}
 
@@ -94,7 +95,12 @@ def make_runtime(artifact: Artifact, spec: str, *, faults=None, **kw):
                     f"emulated by the 'board-py' runtime; spec {spec!r} "
                     f"cannot inject {plan.describe()}")
             kw["faults"] = plan
-    return _REGISTRY[family](artifact, opts, **kw)
+    rec = ttrace.get()
+    if not rec.enabled:
+        return _REGISTRY[family](artifact, opts, **kw)
+    with rec.span("runtime.build", "system", attrs={"family": family},
+                  meta={"spec": spec}):
+        return _REGISTRY[family](artifact, opts, **kw)
 
 
 #: near-miss grammar probe set: every way the spec grammar can be (mis)spelled

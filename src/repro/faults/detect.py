@@ -26,12 +26,32 @@ plan — they work from invariants the clean system already guarantees:
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
 from repro.core.artifact import Artifact
+from repro.telemetry import trace as ttrace
 
 
+def _traced(kind: str):
+    """Wrap a detector so each firing is a ``detect.<kind>`` system-scope
+    span carrying the error count — a no-op until a Tracer is installed."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            rec = ttrace.get()
+            if not rec.enabled:
+                return fn(*args, **kw)
+            sp = rec.begin(f"detect.{kind}", "system")
+            errs = fn(*args, **kw)
+            rec.end(sp, attrs={"errors": len(errs)})
+            return errs
+        return wrapper
+    return deco
+
+
+@_traced("checksum")
 def integrity_errors(art: Artifact | None) -> list[str]:
     """Re-hash an artifact's arrays against its manifest. Empty list means
     intact; ``None`` (a runtime that exposes no artifact) or an in-memory
@@ -81,6 +101,7 @@ class Canary:
     def covers_all_groups(self) -> bool:
         return len(self.covered_groups) == self.n_groups
 
+    @_traced("canary")
     def mismatches(self, got_labels) -> list[str]:
         got = np.asarray(got_labels)[: len(self.want)]
         bad = np.nonzero(got != self.want)[0]
@@ -125,6 +146,7 @@ class Canary:
 
 
 # ---------------------------------------------------------------------- trace
+@_traced("trace")
 def trace_errors(runtime, images: np.ndarray) -> list[str]:
     """Board-trace cross-check: re-encode the served images, rebuild the
     expected per-tick AER dispatch histogram and the full
@@ -176,6 +198,7 @@ def trace_errors(runtime, images: np.ndarray) -> list[str]:
 
 
 # ------------------------------------------------------------------------ ecc
+@_traced("ecc")
 def ecc_errors(runtime) -> list[str]:
     """Membrane-parity detector readout: nonzero per-image ECC hit counts
     from the last forward mean membrane words were upset mid-inference."""

@@ -72,6 +72,9 @@ from repro.core.runtimes import make_runtime
 from repro.faults.detect import (Canary, ecc_errors, runtime_integrity_errors,
                                  trace_errors)
 from repro.faults.plan import FaultPlan
+from repro.telemetry import trace as ttrace
+from repro.telemetry.metrics import (DEPTH_BUCKETS, LATENCY_BUCKETS_US,
+                                     RECOVERY_BUCKETS_MS, MetricsRegistry)
 
 
 class ServingError(RuntimeError):
@@ -124,6 +127,10 @@ class ServeRequest:
     error: str | None = None      # set instead of label if serving failed
     attempts: int = 0             # re-serves consumed (0 = first try)
     solo: bool = False            # poison isolation: serve in a batch of one
+    # telemetry handles (set only while a Tracer is installed): the request
+    # root span opened at submit and the admission child closed at formation
+    _span: object = dataclasses.field(default=None, repr=False, compare=False)
+    _adm: object = dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def latency_us(self) -> float:
@@ -312,6 +319,11 @@ class ServingScheduler:
         self._next_rid = 0
         self._stop = False
         self._all_quarantined = False
+        # every scheduler counter/gauge/histogram and the typed fault ledger
+        # live in ONE registry (one internal lock), so stats() is a
+        # consistent snapshot — no torn reads while lanes keep mutating
+        self.metrics = MetricsRegistry()
+        self._batch_seq = 0
         self.reset_stats()
 
         self.canary: Canary | None = None
@@ -352,6 +364,18 @@ class ServingScheduler:
             rid = self._next_rid
             self._next_rid += 1
             req = ServeRequest(rid, image, t_submit=time.perf_counter())
+            rec = ttrace.get()
+            if rec.enabled:
+                # request root span: opened here, closed by the completion
+                # choke point (possibly on another thread) — begin/end, not
+                # the context manager
+                req._span = rec.begin("request", "system",
+                                      trace=f"req-{rid:08d}",
+                                      attrs={"rid": rid})
+                if req._span is not None:
+                    req._adm = rec.begin("admission", "system",
+                                         trace=req._span.trace,
+                                         parent=req._span.sid)
             self._admission.append(req)
             self._outstanding.add(rid)
             self._requests[rid] = req
@@ -450,7 +474,23 @@ class ServingScheduler:
 
     def _complete_locked(self, r: ServeRequest) -> None:
         """Caller holds the lock: publish a finished request, releasing its
-        outstanding slot and bounding the unclaimed backlog."""
+        outstanding slot and bounding the unclaimed backlog. This is the ONE
+        place a request span closes — success, error, and close() paths all
+        funnel through here, so no request span can leak open."""
+        sp = r._span
+        if sp is not None:
+            rec = ttrace.get()
+            if r.error is not None:
+                rec.emit("complete", "system", trace=sp.trace, parent=sp.sid,
+                         attrs={"error": r.error}, meta={"lane": r.lane})
+            else:
+                rec.emit("complete", "system", trace=sp.trace, parent=sp.sid,
+                         attrs={"label": r.label, "steps": r.steps,
+                                "fallback": r.fallback_dense,
+                                "attempts": r.attempts},
+                         meta={"lane": r.lane})
+            rec.end(sp)
+            r._span = r._adm = None
         self._outstanding.discard(r.rid)
         self._requests.pop(r.rid, None)
         self._completed[r.rid] = r
@@ -460,7 +500,7 @@ class ServingScheduler:
             if victim is None:               # everything left has a waiter
                 break
             del self._completed[victim]
-            self._abandoned += 1
+            self.metrics.inc("abandoned_results")
 
     def _fail_locked(self, r: ServeRequest, tok: int, msg: str,
                      lane_id: int | None, now: float) -> None:
@@ -473,7 +513,7 @@ class ServingScheduler:
         r.t_done = now
         self._complete_locked(r)
         self._pending -= 1
-        self.errors += 1
+        self.metrics.inc("errors")
 
     def __enter__(self):
         return self
@@ -544,6 +584,26 @@ class ServingScheduler:
         lane.current = pairs
         lane.busy_since = t0
         lane.batches_served += 1
+        rec = ttrace.get()
+        bspan = lspan = None
+        if rec.enabled:
+            with self._lock:
+                seq = self._batch_seq
+                self._batch_seq += 1
+            bspan = rec.begin("batch", "system", trace=f"batch-{seq:06d}",
+                              attrs={"k": k, "max_batch": self.max_batch},
+                              meta={"lane": lane.lane_id,
+                                    "rids": [r.rid for r in batch]})
+            for r, _ in pairs:
+                rec.end(r._adm)     # admission ends where the batch forms
+                if r._span is not None:
+                    rec.emit("batch-form", "system", trace=r._span.trace,
+                             parent=r._span.sid, meta={"batch": seq})
+            if bspan is not None:
+                lspan = rec.begin("lane", "system", trace=bspan.trace,
+                                  parent=bspan.sid,
+                                  meta={"lane": lane.lane_id,
+                                        "health": lane.health})
         failure: str | None = None
         exc: BaseException | None = None
         delta = None
@@ -551,7 +611,14 @@ class ServingScheduler:
             images = np.zeros((self.max_batch, self.n_in), np.float32)
             for j, r in enumerate(batch):
                 images[j] = r.image          # zero-pad to the fixed shape
-            delta = lane.serve(images, k)
+            if lspan is not None:
+                # context-managed so the runtime's own spans (board.forward,
+                # accel.kernel, …) nest under this batch's tree
+                with rec.span("runtime", "system", trace=bspan.trace,
+                              parent=lspan.sid, meta={"spec": lane.spec}):
+                    delta = lane.serve(images, k)
+            else:
+                delta = lane.serve(images, k)
             if self.resilience.verify:
                 errs = self._verify_errors(lane, images)
                 if errs:
@@ -563,13 +630,16 @@ class ServingScheduler:
             lane.busy_since = None
             lane.current = None
         now = time.perf_counter()
+        rec.end(lspan)
+        if bspan is not None:
+            rec.end(bspan, attrs={"failed": failure is not None})
 
         if failure is not None:
             if not self._threads:
                 # inline mode: no retry machinery — complete with .error so
                 # nothing strands, then surface to the synchronous caller
                 with self._cv:
-                    self.lane_faults += 1
+                    self.metrics.inc("lane_faults")
                     for r, tok in pairs:
                         self._fail_locked(r, tok, failure, lane.lane_id, now)
                     self._cv.notify_all()
@@ -583,6 +653,7 @@ class ServingScheduler:
             if self.lanes[lane.lane_id] is not lane or lane.hung:
                 return  # superseded mid-serve; the watchdog requeued these
             completed = 0
+            m = self.metrics
             for j, (r, tok) in enumerate(pairs):
                 if r.rid not in self._outstanding or r.attempts != tok:
                     continue                 # stale: requeued/completed away
@@ -592,18 +663,19 @@ class ServingScheduler:
                 r.lane = lane.lane_id
                 r.t_done = now
                 self._complete_locked(r)
-                self._latencies_us.append(r.latency_us)
+                m.observe("request_latency_us", r.latency_us,
+                          LATENCY_BUCKETS_US)
                 completed += 1
             self._pending -= completed
-            self.images_out += completed
-            self.batches += 1
-            self._batch_fill += k
-            self.accel_s += delta["accel_s"]
-            self.system_s += now - t0
-            self.overflow_fallbacks += delta["overflow_fallbacks"]
-            self.board_cycles += delta.get("board_cycles", 0)
-            self.board_nj += delta.get("board_nj", 0.0)
-            self.board_stalls += delta.get("board_stalls", 0)
+            m.inc("images_out", completed)
+            m.inc("batches")
+            m.observe("batch_fill", k, DEPTH_BUCKETS)
+            m.inc("accel_s", delta["accel_s"])
+            m.inc("system_s", now - t0)
+            m.inc("overflow_fallbacks", delta["overflow_fallbacks"])
+            m.inc("board_cycles", delta.get("board_cycles", 0))
+            m.inc("board_nj", delta.get("board_nj", 0.0))
+            m.inc("board_stalls", delta.get("board_stalls", 0))
             self._cv.notify_all()
 
     # ------------------------------------------------------------- detection
@@ -613,21 +685,24 @@ class ServingScheduler:
         trace cross-check, artifact checksum, periodic canaries."""
         if lane.degraded:
             return []                        # dense fallback: clean by build
+        m = self.metrics
         errs = ecc_errors(lane.runtime)
-        with self._lock:
-            if errs:
-                self.ecc_detected += 1
+        if errs:
+            m.inc("ecc_detected")
+            m.event("detector", kind="ecc", lane=lane.lane_id, n=len(errs))
         t_errs = trace_errors(lane.runtime, images)
-        with self._lock:
-            self.trace_checks += 1
-            if t_errs:
-                self.trace_failures += 1
+        m.inc("trace_checks")
+        if t_errs:
+            m.inc("trace_failures")
+            m.event("detector", kind="trace", lane=lane.lane_id,
+                    n=len(t_errs))
         errs += t_errs
         i_errs = runtime_integrity_errors(lane.runtime)
-        with self._lock:
-            self.integrity_checks += 1
-            if i_errs:
-                self.integrity_failures += 1
+        m.inc("integrity_checks")
+        if i_errs:
+            m.inc("integrity_failures")
+            m.event("detector", kind="checksum", lane=lane.lane_id,
+                    n=len(i_errs))
         errs += i_errs
         every = self.resilience.canary_every
         if (self.canary is not None and every
@@ -650,20 +725,22 @@ class ServingScheduler:
             errs = self.canary.mismatches(got)
         except Exception as e:  # noqa: BLE001 — a crash IS a failed probe
             errs = [f"canary probe serve failed: {type(e).__name__}: {e}"]
-        with self._lock:
-            self.canary_checks += 1
-            if errs:
-                self.canary_failures += 1
+        self.metrics.inc("canary_checks")
+        if errs:
+            self.metrics.inc("canary_failures")
+            self.metrics.event("detector", kind="canary", lane=lane.lane_id,
+                               n=len(errs))
         return errs
 
     def _startup_errors(self, lane: _Lane) -> list[str]:
         """Commission / quarantine re-entry checks: artifact checksum on the
         lane's in-memory copy, then the canary probes (when built)."""
         errs = runtime_integrity_errors(lane.runtime)
-        with self._lock:
-            self.integrity_checks += 1
-            if errs:
-                self.integrity_failures += 1
+        self.metrics.inc("integrity_checks")
+        if errs:
+            self.metrics.inc("integrity_failures")
+            self.metrics.event("detector", kind="checksum",
+                               lane=lane.lane_id, n=len(errs))
         if self.canary is not None:
             errs = errs + self._canary_errors(lane)
         return errs
@@ -681,6 +758,14 @@ class ServingScheduler:
             return [f"lane warmup failed: {type(e).__name__}: {e}"]
 
     # -------------------------------------------------------------- recovery
+    def _transition(self, lane: _Lane, to: str, reason: str) -> None:
+        """Move a lane's health state, recording the transition as a typed
+        event in the ledger (no event for a self-transition)."""
+        if lane.health != to:
+            self.metrics.event("lane_transition", lane=lane.lane_id,
+                               frm=lane.health, to=to, reason=reason)
+        lane.health = to
+
     def _commission(self, lane_id: int) -> _Lane:
         """Build lane ``lane_id`` and gate it through the startup checks: a
         lane that fails (e.g. an SEU already in its BRAM image) is scrubbed
@@ -695,8 +780,7 @@ class ServingScheduler:
         if not errs:
             return lane
         t0 = time.perf_counter()
-        with self._lock:
-            self.lane_faults += 1
+        self.metrics.inc("lane_faults")
         fresh = _Lane(lane_id, self.art, self.spec, self.kernel,
                       self.latency_mode,
                       plan.after_scrub() if plan is not None else None)
@@ -706,14 +790,14 @@ class ServingScheduler:
         if not errs and self.resilience.startup_checks:
             errs = self._startup_errors(fresh)
         if not errs:
-            with self._lock:
-                self.lane_restarts += 1
-                self.recoveries += 1
-                self._recovery_ms.append(1e3 * (time.perf_counter() - t0))
+            self.metrics.inc("lane_restarts")
+            self.metrics.inc("recoveries")
+            self.metrics.observe("recovery_ms",
+                                 1e3 * (time.perf_counter() - t0),
+                                 RECOVERY_BUCKETS_MS)
             return fresh
-        with self._lock:
-            fresh.health = "quarantined"
-            self.quarantines += 1
+        self._transition(fresh, "quarantined", "startup checks failed")
+        self.metrics.inc("quarantines")
         if self.resilience.degrade:
             self._degrade(fresh)
         else:
@@ -729,9 +813,9 @@ class ServingScheduler:
             if self.lanes[lane.lane_id] is not lane or lane.hung:
                 self._cv.notify_all()
                 return  # the watchdog superseded this lane mid-serve
-            lane.health = "suspect"
+            self._transition(lane, "suspect", "fault detected")
             lane.fault_count += 1
-            self.lane_faults += 1
+            self.metrics.inc("lane_faults")
             self._requeue_locked(pairs, reason, lane.lane_id)
             self._cv.notify_all()
         self._recover_lane(lane, t_fault)
@@ -753,8 +837,14 @@ class ServingScheduler:
                 continue
             if isolate:
                 r.solo = True
+            if r._span is not None:
+                ttrace.get().emit("requeue", "system", trace=r._span.trace,
+                                  parent=r._span.sid,
+                                  attrs={"attempt": r.attempts},
+                                  meta={"lane": lane_id,
+                                        "reason": reason[:120]})
             self._admission.appendleft(r)
-            self.requeued += 1
+            self.metrics.inc("requeued")
 
     def _recover_lane(self, lane: _Lane, t_fault: float) -> None:
         """Scrub/reload recovery: exponential backoff, rebuild the lane's
@@ -784,13 +874,18 @@ class ServingScheduler:
                 fresh.fault_count = lane.fault_count
                 fresh.restarts = lane.restarts + 1
                 self.lanes[lane.lane_id] = fresh
-                self.lane_restarts += 1
-                self.recoveries += 1
-                self._recovery_ms.append(1e3 * (time.perf_counter() - t_fault))
+                self.metrics.inc("lane_restarts")
+                self.metrics.inc("recoveries")
+                self.metrics.observe(
+                    "recovery_ms", 1e3 * (time.perf_counter() - t_fault),
+                    RECOVERY_BUCKETS_MS)
+                self.metrics.event("lane_transition", lane=lane.lane_id,
+                                   frm="suspect", to="healthy",
+                                   reason="scrub+rebuild passed checks")
                 self._cv.notify_all()
                 return
-            lane.health = "quarantined"
-            self.quarantines += 1
+            self._transition(lane, "quarantined", "rebuild failed checks")
+            self.metrics.inc("quarantines")
             self._cv.notify_all()
         if res.degrade:
             self._degrade(lane)
@@ -808,10 +903,12 @@ class ServingScheduler:
             return
         with self._cv:
             lane.degraded = True
-            lane.health = "degraded"
+            self._transition(lane, "degraded", "circuit breaker")
+            self.metrics.event("breaker_trip", lane=lane.lane_id,
+                               fault_count=lane.fault_count)
             if lane.injector is not None:
                 lane.injector.disarm()
-            self.breaker_degraded += 1
+            self.metrics.inc("breaker_degraded")
             self._cv.notify_all()
 
     def _retire(self, lane: _Lane) -> None:
@@ -821,7 +918,7 @@ class ServingScheduler:
         all-retired case there is handled after the lane list is built.)"""
         with self._cv:
             lane.retired = True
-            lane.health = "quarantined"
+            self._transition(lane, "quarantined", "retired from service")
             lanes = getattr(self, "lanes", None)
             if lanes is not None and all(l.retired for l in lanes) \
                     and getattr(self, "_threads", None):
@@ -851,10 +948,10 @@ class ServingScheduler:
                     b = lane.busy_since
                     if b is not None and now - b > w and not lane.hung:
                         lane.hung = True
-                        lane.health = "suspect"
+                        self._transition(lane, "suspect", "watchdog timeout")
                         lane.fault_count += 1
-                        self.lane_faults += 1
-                        self.watchdog_timeouts += 1
+                        self.metrics.inc("lane_faults")
+                        self.metrics.inc("watchdog_timeouts")
                         self._requeue_locked(
                             lane.current or [],
                             f"watchdog: batch exceeded {w:.3f}s on lane "
@@ -889,16 +986,22 @@ class ServingScheduler:
                 self.lanes[lane.lane_id] = fresh
                 self._lane_gens[lane.lane_id] += 1
                 gen = self._lane_gens[lane.lane_id]
-                self.lane_restarts += 1
-                self.recoveries += 1
-                self._recovery_ms.append(1e3 * (time.perf_counter() - t_fault))
+                self.metrics.inc("lane_restarts")
+                self.metrics.inc("recoveries")
+                self.metrics.observe(
+                    "recovery_ms", 1e3 * (time.perf_counter() - t_fault),
+                    RECOVERY_BUCKETS_MS)
+                self.metrics.event("lane_transition", lane=lane.lane_id,
+                                   frm="suspect", to="healthy",
+                                   reason="hung lane replaced")
                 spawn = threading.Thread(
                     target=self._worker, args=(lane.lane_id, gen),
                     daemon=True, name=f"serve-lane-{lane.lane_id}r{gen}")
                 self._threads.append(spawn)
             else:
-                lane.health = "quarantined"
-                self.quarantines += 1
+                self._transition(lane, "quarantined",
+                                 "hung-lane replacement failed checks")
+                self.metrics.inc("quarantines")
             self._cv.notify_all()
         if spawn is not None:
             spawn.start()
@@ -910,9 +1013,8 @@ class ServingScheduler:
     # ---------------------------------------------------------------- stats
     def _sample_depth(self) -> None:
         d = len(self._admission)
-        self._depth_sum += d
-        self._depth_samples += 1
-        self._depth_peak = max(self._depth_peak, d)
+        self.metrics.observe("queue_depth", d, DEPTH_BUCKETS)
+        self.metrics.set_max("queue_depth_peak", d)
 
     # percentile window: enough to hold any bench run exactly, bounded so a
     # long-running server cannot leak memory (percentiles become a sliding
@@ -920,94 +1022,84 @@ class ServingScheduler:
     LATENCY_WINDOW = 65536
 
     def reset_stats(self) -> None:
-        with self._lock:
-            self.accel_s = self.system_s = 0.0
-            self.images_out = self.overflow_fallbacks = self.batches = 0
-            self.errors = 0
-            self._abandoned = 0
-            self.board_cycles = 0
-            self.board_nj = 0.0
-            self.board_stalls = 0
-            # ---- detection / recovery counters (the tentpole's ledger) ----
-            self.lane_faults = 0          # detected faults, all sources
-            self.requeued = 0             # requests pushed back for retry
-            self.watchdog_timeouts = 0    # batches the watchdog cancelled
-            self.lane_restarts = 0        # successful scrub/rebuild cycles
-            self.quarantines = 0          # rebuilds that failed their checks
-            self.breaker_degraded = 0     # lanes circuit-broken to dense
-            self.recoveries = 0           # fault→healthy round trips
-            self._recovery_ms: list[float] = []
-            self.integrity_checks = self.integrity_failures = 0
-            self.canary_checks = self.canary_failures = 0
-            self.trace_checks = self.trace_failures = 0
-            self.ecc_detected = 0
-            self._latencies_us: collections.deque[float] = collections.deque(
-                maxlen=self.LATENCY_WINDOW)
-            self._batch_fill = 0
-            self._depth_sum = self._depth_samples = self._depth_peak = 0
+        """Zero the registry in place (post-warmup semantics) and eagerly
+        register the fixed-bucket histograms so their boundaries are pinned
+        once, at reset, not wherever the first observation lands."""
+        m = self.metrics
+        m.reset()
+        m.histogram("request_latency_us", LATENCY_BUCKETS_US,
+                    window=self.LATENCY_WINDOW)
+        m.histogram("recovery_ms", RECOVERY_BUCKETS_MS)
+        m.histogram("batch_fill", DEPTH_BUCKETS)
+        m.histogram("queue_depth", DEPTH_BUCKETS)
 
     def stats(self) -> dict:
+        """Legacy-shaped view over one consistent ``metrics.snapshot()`` —
+        every key the pre-telemetry scheduler reported, same semantics, but
+        all totals were true at the same instant (no torn reads)."""
         with self._lock:
-            n = self.images_out
-            # ONE denominator guard for every per-image rate (board and
-            # accelerator branches used to disagree: `if n` vs `max(1, n)`)
-            per_image = lambda x: x / n if n else 0.0
-            lat = np.asarray(self._latencies_us, np.float64)
-            st = {
-                "spec": self.spec,
-                "workers": self.workers,
-                "max_batch": self.max_batch,
-                "max_wait_us": self.max_wait_us,
-                "accelerator_s": self.accel_s,
-                "system_s": self.system_s,
-                "host_overhead_s": max(0.0, self.system_s - self.accel_s),
-                "images_out": n,
-                "overflow_fallbacks": self.overflow_fallbacks,
-                "errors": self.errors,
-                "abandoned_results": self._abandoned,
-                "batches": self.batches,
-                "accel_us_per_image": per_image(1e6 * self.accel_s),
-                "system_us_per_image": per_image(1e6 * self.system_s),
-                "p50_latency_us":
-                    float(np.percentile(lat, 50)) if lat.size else 0.0,
-                "p95_latency_us":
-                    float(np.percentile(lat, 95)) if lat.size else 0.0,
-                "p99_latency_us":
-                    float(np.percentile(lat, 99)) if lat.size else 0.0,
-                "mean_latency_us": float(np.mean(lat)) if lat.size else 0.0,
-                "queue_depth_mean": (self._depth_sum / self._depth_samples
-                                     if self._depth_samples else 0.0),
-                "queue_depth_peak": self._depth_peak,
-                "batch_fill_mean": (self._batch_fill / self.batches
-                                    if self.batches else 0.0),
-                # ---- resilience ledger ----
-                "lane_faults": self.lane_faults,
-                "requeued": self.requeued,
-                "watchdog_timeouts": self.watchdog_timeouts,
-                "lane_restarts": self.lane_restarts,
-                "quarantines": self.quarantines,
-                "breaker_degraded": self.breaker_degraded,
-                "recoveries": self.recoveries,
-                "recovery_ms_mean": (float(np.mean(self._recovery_ms))
-                                     if self._recovery_ms else 0.0),
-                "integrity_checks": self.integrity_checks,
-                "integrity_failures": self.integrity_failures,
-                "canary_checks": self.canary_checks,
-                "canary_failures": self.canary_failures,
-                "trace_checks": self.trace_checks,
-                "trace_failures": self.trace_failures,
-                "ecc_detected": self.ecc_detected,
-                "lane_health": [lane.health for lane in self.lanes],
-            }
-            if self.family == "board":
-                cost = getattr(self.lanes[0].runtime, "cost", None)
-                clock = cost.clock_hz if cost is not None else 1.0
-                st.update({
-                    "board_cycles": self.board_cycles,
-                    "board_stalls": self.board_stalls,
-                    "board_cycles_per_image": per_image(self.board_cycles),
-                    "board_model_us_per_image":
-                        per_image(1e6 * self.board_cycles / clock),
-                    "board_nj_per_image": per_image(self.board_nj),
-                })
-            return st
+            snap = self.metrics.snapshot()
+            lane_health = [lane.health for lane in self.lanes]
+        n = int(snap.get("images_out", 0))
+        # ONE denominator guard for every per-image rate (board and
+        # accelerator branches used to disagree: `if n` vs `max(1, n)`)
+        per_image = lambda x: x / n if n else 0.0
+        accel_s = float(snap.get("accel_s", 0.0))
+        system_s = float(snap.get("system_s", 0.0))
+        batches = int(snap.get("batches", 0))
+        st = {
+            "spec": self.spec,
+            "workers": self.workers,
+            "max_batch": self.max_batch,
+            "max_wait_us": self.max_wait_us,
+            "accelerator_s": accel_s,
+            "system_s": system_s,
+            "host_overhead_s": max(0.0, system_s - accel_s),
+            "images_out": n,
+            "overflow_fallbacks": int(snap.get("overflow_fallbacks", 0)),
+            "errors": int(snap.get("errors", 0)),
+            "abandoned_results": int(snap.get("abandoned_results", 0)),
+            "batches": batches,
+            "accel_us_per_image": per_image(1e6 * accel_s),
+            "system_us_per_image": per_image(1e6 * system_s),
+            "p50_latency_us": snap.get("request_latency_us_p50", 0.0),
+            "p95_latency_us": snap.get("request_latency_us_p95", 0.0),
+            "p99_latency_us": snap.get("request_latency_us_p99", 0.0),
+            "mean_latency_us": snap.get("request_latency_us_mean", 0.0),
+            "queue_depth_mean": snap.get("queue_depth_mean", 0.0),
+            "queue_depth_peak": int(snap.get("queue_depth_peak", 0)),
+            "batch_fill_mean": snap.get("batch_fill_mean", 0.0),
+            # ---- resilience ledger (counters from the same snapshot) ----
+            "lane_faults": int(snap.get("lane_faults", 0)),
+            "requeued": int(snap.get("requeued", 0)),
+            "watchdog_timeouts": int(snap.get("watchdog_timeouts", 0)),
+            "lane_restarts": int(snap.get("lane_restarts", 0)),
+            "quarantines": int(snap.get("quarantines", 0)),
+            "breaker_degraded": int(snap.get("breaker_degraded", 0)),
+            "recoveries": int(snap.get("recoveries", 0)),
+            "recovery_ms_mean": snap.get("recovery_ms_mean", 0.0),
+            "integrity_checks": int(snap.get("integrity_checks", 0)),
+            "integrity_failures": int(snap.get("integrity_failures", 0)),
+            "canary_checks": int(snap.get("canary_checks", 0)),
+            "canary_failures": int(snap.get("canary_failures", 0)),
+            "trace_checks": int(snap.get("trace_checks", 0)),
+            "trace_failures": int(snap.get("trace_failures", 0)),
+            "ecc_detected": int(snap.get("ecc_detected", 0)),
+            "lane_health": lane_health,
+            # ---- telemetry tier ----
+            "events_total": int(snap.get("events_total", 0)),
+            "events_dropped": int(snap.get("events_dropped", 0)),
+        }
+        if self.family == "board":
+            board_cycles = int(snap.get("board_cycles", 0))
+            cost = getattr(self.lanes[0].runtime, "cost", None)
+            clock = cost.clock_hz if cost is not None else 1.0
+            st.update({
+                "board_cycles": board_cycles,
+                "board_stalls": int(snap.get("board_stalls", 0)),
+                "board_cycles_per_image": per_image(board_cycles),
+                "board_model_us_per_image":
+                    per_image(1e6 * board_cycles / clock),
+                "board_nj_per_image": per_image(snap.get("board_nj", 0.0)),
+            })
+        return st

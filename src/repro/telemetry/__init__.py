@@ -1,0 +1,19 @@
+"""Deterministic telemetry — scope-aware tracing, metrics, and exporters.
+
+The repo's observability tier (its seventh subsystem): structured span
+traces with explicit ``accel|system`` scope tags and logical clocks
+(``telemetry.trace``), a counter/gauge/histogram registry with typed events
+(``telemetry.metrics``), and JSONL / Prometheus exporters
+(``telemetry.export``). Instrumentation is threaded through the serving
+scheduler, the board emulator, and the accelerator runtimes; it is a no-op
+until a ``Tracer`` is installed.
+"""
+
+from repro.telemetry.metrics import (DEPTH_BUCKETS, LATENCY_BUCKETS_US,
+                                     RECOVERY_BUCKETS_MS, Event, Histogram,
+                                     MetricsRegistry)
+from repro.telemetry.trace import SCOPES, NullRecorder, Span, Tracer
+
+__all__ = ["DEPTH_BUCKETS", "LATENCY_BUCKETS_US", "RECOVERY_BUCKETS_MS",
+           "Event", "Histogram", "MetricsRegistry", "SCOPES", "NullRecorder",
+           "Span", "Tracer"]

@@ -1,8 +1,11 @@
 """Fault-tolerant checkpoint manager.
 
 Properties (tested in tests/training/test_checkpoint.py):
-  * atomic: writes to ``step_XXXX.tmp`` then ``os.replace`` — a crash mid-save
-    never corrupts the latest checkpoint;
+  * atomic AND durable: writes to ``step_XXXX.tmp``, fsyncs every file and
+    the tmp directory entry, then ``os.replace``, then fsyncs the parent
+    directory — a crash mid-save never corrupts the latest checkpoint, and
+    a power loss right after ``save()`` returns cannot roll it back (the
+    rename is only durable once the parent directory entry is on disk);
   * integrity-verified: per-array SHA-256 manifest, verified on restore
     (the same discipline the deployment artifact uses);
   * resumable: restore() is bit-exact — tests assert identical training
@@ -23,6 +26,17 @@ from typing import Any, Callable
 
 import jax
 import numpy as np
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by fd. Directory fsync pins the ENTRY
+    (the name -> inode mapping) — required after create/rename for the
+    operation itself to be durable, not just the bytes."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(pytree) -> dict[str, np.ndarray]:
@@ -77,7 +91,11 @@ class CheckpointManager:
         manifest = {}
         for key, a in arrays.items():
             fn = hashlib.sha256(key.encode()).hexdigest()[:24] + ".npy"
-            np.save(os.path.join(tmp, fn), a)
+            path = os.path.join(tmp, fn)
+            with open(path, "wb") as f:
+                np.save(f, a)
+                f.flush()
+                os.fsync(f.fileno())    # array bytes durable before publish
             manifest[key] = {
                 "file": fn, "dtype": str(a.dtype), "shape": list(a.shape),
                 "sha256": hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest(),
@@ -85,9 +103,13 @@ class CheckpointManager:
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump({"step": step, "meta": meta or {}, "arrays": manifest},
                       f, sort_keys=True)
+            f.flush()
+            os.fsync(f.fileno())        # manifest durable before publish
+        _fsync_path(tmp)                # the tmp dir's entries themselves
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)          # atomic publish
+        _fsync_path(self.dir)           # …and durable: pin the rename
         self._prune()
         return final
 

@@ -63,3 +63,35 @@ def test_committed_bench_files_conform():
             schema.validate_rows(fn[:-5], json.load(f))
         found += 1
     assert found >= 2          # event_pipeline.json + board_emu.json
+
+def test_telemetry_block_is_the_one_structured_exception():
+    schema.validate_rows("t", [_row(telemetry={"span_count": 12,
+                                               "dropped_spans": 0,
+                                               "overhead_pct": 0.3})])
+    schema.validate_rows("t", [_row(telemetry={"span_count": 1})])  # subset
+
+
+def test_telemetry_block_keys_are_closed():
+    with pytest.raises(schema.SchemaError, match="unknown keys"):
+        schema.validate_rows("t", [_row(telemetry={"span_count": 1,
+                                                   "notes": "x"})])
+    with pytest.raises(schema.SchemaError, match="non-empty"):
+        schema.validate_rows("t", [_row(telemetry={})])
+    with pytest.raises(schema.SchemaError, match="non-empty"):
+        schema.validate_rows("t", [_row(telemetry=[1, 2])])
+
+
+def test_telemetry_values_numeric_only():
+    with pytest.raises(schema.SchemaError, match="numeric"):
+        schema.validate_rows("t", [_row(telemetry={"span_count": "12"})])
+    with pytest.raises(schema.SchemaError, match="numeric"):
+        schema.validate_rows("t", [_row(telemetry={"dropped_spans": True})])
+    import numpy as np
+    schema.validate_rows("t", [_row(telemetry={"span_count": np.int64(3),
+                                               "overhead_pct":
+                                               np.float32(0.1)})])
+
+
+def test_other_nested_dicts_still_rejected():
+    with pytest.raises(schema.SchemaError, match="scalar"):
+        schema.validate_rows("t", [_row(tracing={"span_count": 1})])

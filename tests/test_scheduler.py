@@ -230,3 +230,64 @@ def test_result_unknown_or_already_claimed_rid_raises(trained_artifact):
     s.drain()
     with pytest.raises(KeyError):
         s.result(rid2)                         # swept by a drain()
+
+
+def test_stats_snapshot_consistent_under_concurrent_chaos(trained_artifact):
+    """stats() is one consistent registry snapshot, not a field-by-field
+    read of live counters: submitter threads and a crashing lane mutate the
+    account while readers hammer stats(). Every successive snapshot must be
+    monotone in the counter totals, never show more completions than
+    admissions, and the final account must be exact."""
+    art, _, (xte, _) = trained_artifact
+    n, n_threads = 48, 3
+    s = ServingScheduler(art, spec="accelerator-event", kernel="fused",
+                         workers=2, max_batch=8, max_wait_us=500.0,
+                         faults="crash=0,seed=12",
+                         resilience={"backoff_s": 0.001})
+    submitted = []
+    sub_lock = threading.Lock()
+    stop = threading.Event()
+    violations: list[str] = []
+
+    def submitter(k):
+        for i in range(k, n, n_threads):
+            rid = s.submit(xte[i % len(xte)])
+            with sub_lock:
+                submitted.append(rid)
+
+    def reader():
+        monotone = ("images_out", "batches", "requeued", "lane_faults",
+                    "lane_restarts", "errors")
+        last = {k: 0 for k in monotone}
+        while not stop.is_set():
+            st = s.stats()
+            with sub_lock:
+                n_sub = len(submitted)
+            if st["images_out"] > n_sub:
+                violations.append(f"torn read: images_out "
+                                  f"{st['images_out']} > submitted {n_sub}")
+            for k in monotone:
+                if st[k] < last[k]:
+                    violations.append(f"counter {k} went backwards: "
+                                      f"{st[k]} < {last[k]}")
+                last[k] = st[k]
+            if st["batches"] and st["images_out"] < st["batches"]:
+                violations.append("more batches than completed images")
+
+    with s:
+        readers = [threading.Thread(target=reader) for _ in range(2)]
+        subs = [threading.Thread(target=submitter, args=(k,))
+                for k in range(n_threads)]
+        for t in readers + subs:
+            t.start()
+        for t in subs:
+            t.join(timeout=120.0)
+        done = s.drain()
+        stop.set()
+        for t in readers:
+            t.join(timeout=30.0)
+        st = s.stats()
+    assert not violations, violations[:5]
+    assert sorted(done) == sorted(submitted)
+    assert st["images_out"] == n and st["lane_faults"] >= 1
+    assert all(r.error is None for r in done.values())

@@ -208,3 +208,52 @@ def test_grad_accumulation_matches_full_batch():
     for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-4, atol=2e-5)
+
+
+def test_checkpoint_durability_ordering(tmp_path, monkeypatch):
+    """save() must fsync every payload file AND the tmp directory entry
+    BEFORE the atomic os.replace publish, and fsync the parent directory
+    AFTER it — otherwise a power loss can publish an empty checkpoint or
+    roll back a save() that already returned."""
+    import os as os_mod
+
+    events = []
+    real_fsync, real_replace = os_mod.fsync, os_mod.replace
+
+    def spy_fsync(fd):
+        events.append(("fsync", os_mod.fstat(fd).st_mode & 0o170000))
+        return real_fsync(fd)
+
+    def spy_replace(src, dst):
+        events.append(("replace", src, dst))
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os_mod, "fsync", spy_fsync)
+    monkeypatch.setattr(os_mod, "replace", spy_replace)
+
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=2)
+    tree = {"w": np.arange(6, dtype=np.float32), "b": np.zeros(2)}
+    mgr.save(1, tree)
+
+    kinds = [e[0] for e in events]
+    assert kinds.count("replace") == 1
+    rep = kinds.index("replace")
+    import stat
+    pre = events[:rep]
+    # every array file + manifest.json fsynced before publish...
+    file_syncs = [e for e in pre if e[0] == "fsync"
+                  and e[1] == stat.S_IFREG]
+    assert len(file_syncs) == len(tree) + 1            # arrays + manifest
+    # ...plus the tmp directory entry itself
+    dir_syncs_pre = [e for e in pre if e[0] == "fsync"
+                     and e[1] == stat.S_IFDIR]
+    assert len(dir_syncs_pre) == 1
+    # and exactly one directory fsync AFTER the rename pins the publish
+    post = events[rep + 1:]
+    assert [e[0] for e in post] == ["fsync"]
+    assert post[0][1] == stat.S_IFDIR
+
+    # the spied-on save is still a valid checkpoint
+    step, back = mgr.restore({"w": np.zeros(6, np.float32),
+                              "b": np.zeros(2)})
+    assert step == 1 and np.array_equal(back["w"], tree["w"])
