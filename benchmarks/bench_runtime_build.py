@@ -1,0 +1,156 @@
+"""Runtime construction cost: cold lowering+compile vs the program cache.
+
+The lowering refactor's operational claim is that runtime construction is
+two-tier: a COLD build lowers the artifact and jit-compiles the family's
+callable bundle, while every later build over the same (artifact, config)
+comes out of the process-wide ``ProgramCache`` — the serving tier leans on
+this when the watchdog replaces a hung lane mid-traffic (the rebuilt lane
+must NOT pay XLA compile latency again while requests queue).
+
+Two measurements, both system-scope (host wall clock):
+
+  * per advertised family config: time-to-first-served-batch for a cold
+    process-state build (``PROGRAM_CACHE.clear()`` first — fresh bundle
+    closures force real recompilation) vs a cached rebuild. ``--check``
+    gates cached >= 3x faster than cold for every jitted spec (board-py
+    builds no jitted bundle and is reported ungated).
+  * the watchdog scenario end-to-end: a one-lane scheduler whose lane hangs
+    on its first batch; the replacement lane's ``runtime.build`` span must
+    record ``cache_hit`` in its meta, proving lane recovery rides the cache.
+
+Emits ``results/bench/runtime_build.json`` (schema-validated).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common as CM
+from repro.core.lowering import PROGRAM_CACHE
+from repro.core.runtimes import make_runtime
+from repro.telemetry import trace as ttrace
+from repro.telemetry.trace import Tracer
+
+#: one spec per distinct compiled-bundle config; board-py is the uncompiled
+#: control (pure-python scheduler — nothing to jit, so no 3x gate)
+SPECS = ("reference", "accelerator-batch", "accelerator-event",
+         "accelerator-event-fused", "board-batched", "board-py")
+UNGATED = {"board-py"}
+GATE_SPEEDUP = 3.0
+
+
+def _build_and_serve_ms(art, spec: str, images: np.ndarray) -> float:
+    """Time-to-first-served-batch: construct + one forward (the forward
+    triggers jit tracing/compilation, which is the cost a replacement lane
+    would otherwise pay while requests queue)."""
+    t0 = time.perf_counter()
+    rt = make_runtime(art, spec)
+    rt.forward(images)
+    return 1e3 * (time.perf_counter() - t0)
+
+
+def _watchdog_row(art, images: np.ndarray) -> dict:
+    """Serve through a hung lane with a Tracer installed; the watchdog's
+    replacement lane must be a cache hit (visible in runtime.build meta)."""
+    from repro.faults.plan import FaultPlan
+    from repro.serving.scheduler import ServingScheduler
+
+    make_runtime(art, "accelerator-event").forward(images[:1])  # warm cache
+    plan = FaultPlan(seed=1, hang_batches=(0,), hang_s=2.0, lanes=(0,))
+    tracer = Tracer()
+    prev = ttrace.install(tracer)
+    t0 = time.perf_counter()
+    try:
+        with ServingScheduler(art, spec="accelerator-event", workers=1,
+                              max_batch=8, max_wait_us=500.0, faults=plan,
+                              resilience={"watchdog_s": 0.2,
+                                          "backoff_s": 0.001}) as s:
+            for img in images[:8]:
+                s.submit(img)
+            s.drain()
+            st = s.stats()
+    finally:
+        ttrace.install(prev)
+    wall_ms = 1e3 * (time.perf_counter() - t0)
+    builds = [sp for sp in tracer.spans if sp.name == "runtime.build"]
+    hits = [sp for sp in builds if sp.meta.get("cache_hit") is True]
+    return {"config": "watchdog-replacement-lane",
+            "scope": "system (serving tier, host wall clock)",
+            "wall_ms": wall_ms,
+            "runtime_builds": len(builds),
+            "cache_hit_builds": len(hits),
+            "watchdog_timeouts": int(st.get("watchdog_timeouts", 0)),
+            "lane_restarts": int(st.get("lane_restarts", 0)),
+            "errors": int(st.get("errors", 0)),
+            "telemetry": {"span_count": len(tracer.spans)}}
+
+
+def main(quick: bool = False, check: bool = False) -> int:
+    art, xte, _ = CM.get_artifact_and_data(quick=quick)
+    images = xte[:16]
+    rows: list[dict] = []
+    print(f"runtime build cost, cold (lower + jit compile) vs cached "
+          f"({len(images)} img first batch):")
+    for spec in SPECS:
+        serve = images[:4] if spec == "board-py" else images
+        PROGRAM_CACHE.clear()
+        cold_ms = _build_and_serve_ms(art, spec, serve)
+        cached_ms = min(_build_and_serve_ms(art, spec, serve)
+                        for _ in range(3))
+        speedup = cold_ms / cached_ms if cached_ms > 0 else float("inf")
+        rows.append({"runtime": spec,
+                     "scope": "system (runtime construction, host wall "
+                              "clock)",
+                     "cold_build_ms": cold_ms,
+                     "cached_build_ms": cached_ms,
+                     "speedup": speedup,
+                     "gated": spec not in UNGATED})
+        gate = "" if spec in UNGATED else f"  (gate >= {GATE_SPEEDUP}x)"
+        print(f"  {spec:28s} cold {cold_ms:8.1f} ms   cached "
+              f"{cached_ms:7.1f} ms   {speedup:6.1f}x{gate}")
+
+    wd = _watchdog_row(art, images)
+    rows.append(wd)
+    print(f"watchdog scenario: {wd['runtime_builds']} lane builds, "
+          f"{wd['cache_hit_builds']} cache hits, "
+          f"{wd['watchdog_timeouts']} timeouts, "
+          f"{wd['lane_restarts']} restarts in {wd['wall_ms']:.0f} ms")
+
+    CM.emit("runtime_build", rows)
+
+    if check:
+        bad = []
+        for r in rows:
+            if r.get("gated") and r["speedup"] < GATE_SPEEDUP:
+                bad.append(f"{r['runtime']}: cached build only "
+                           f"{r['speedup']:.1f}x faster than cold "
+                           f"(gate {GATE_SPEEDUP}x)")
+        if wd["watchdog_timeouts"] < 1:
+            bad.append("watchdog never fired (timeouts == 0)")
+        if wd["lane_restarts"] < 1:
+            bad.append("hung lane was never replaced (lane_restarts == 0)")
+        if wd["cache_hit_builds"] < 1:
+            bad.append("no runtime.build span recorded cache_hit=True — "
+                       "the replacement lane recompiled from scratch")
+        if wd["errors"]:
+            bad.append(f"{wd['errors']} requests errored during recovery")
+        if bad:
+            print("CHECK FAILED: " + "; ".join(bad), file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller eval slice (the CI configuration)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless cached builds are >= 3x faster than "
+                         "cold for every jitted spec and the watchdog "
+                         "replacement lane is a cache hit")
+    a = ap.parse_args()
+    sys.exit(main(quick=a.quick, check=a.check))

@@ -16,13 +16,24 @@
 # artifact / the pinned golden traces drift (conformance gate), OR if any
 # injected-fault chaos case violates the detected-or-correct serving
 # invariant (fault-tolerance gate), OR if the telemetry subsystem costs
-# more than its budget (disabled < 2%, enabled < 10% — overhead gate).
+# more than its budget (disabled < 2%, enabled < 10% — overhead gate), OR
+# if the program cache stops paying (cached runtime builds must be >= 3x
+# faster than cold and the watchdog's replacement lane must be a cache
+# hit — runtime-build gate).
 #
 # The serving and chaos gates run with --trace-out so any failing scenario
 # leaves its telemetry span tree (JSONL) next to the JSON failure report.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# lint first when available (CI installs ruff; the dev container may not
+# have it — the gate is advisory there, never silently different)
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks
+else
+    echo "check.sh: ruff not installed, skipping lint (CI runs it)" >&2
+fi
 
 if [[ "${1:-}" != "--benches-only" ]]; then
     PYTEST_ARGS=(-q)
@@ -40,3 +51,4 @@ python -m benchmarks.bench_conformance --quick --check
 python -m benchmarks.bench_fault_tolerance --quick --check \
     --trace-out results/fault_failures
 python -m benchmarks.bench_telemetry_overhead --quick --check
+python -m benchmarks.bench_runtime_build --quick --check

@@ -17,6 +17,11 @@ the scheduler's early stop.
 ``kernel="pallas"`` routes the full-T LIF recurrence through the fused
 Pallas kernel (grid over 128-lane group blocks, interpret mode on CPU);
 ``kernel="jnp"`` is the default jnp mirror. Both are bit-exact.
+
+Execution parameters come from the lowered program (``core.lowering``); the
+jitted device core is cached process-wide per (program, kernel,
+latency_mode, cost), so serving lanes over the same artifact share one
+compiled core.
 """
 
 from __future__ import annotations
@@ -28,15 +33,77 @@ import numpy as np
 from repro.board.energy import BoardTrace, account, span_attrs
 from repro.core import ttfs
 from repro.core.artifact import Artifact
-from repro.core.events import _step_counts
+from repro.core.events import step_counts
 from repro.core.hw import BoardCostModel, PYNQ_COST
-from repro.core.lif_dynamics import lif_scan
-from repro.core.reference import SNNOutput
+from repro.core.lowering import PROGRAM_CACHE, LoweredProgram, lower
+from repro.core.types import SNNOutput, decode_output
 from repro.telemetry import trace as ttrace
 
 
+def _build_core(prog: LoweredProgram, kernel: str, latency_mode: bool,
+                cost: BoardCostModel):
+    """The jitted device core for one (program, kernel, mode, cost) config —
+    a module-level closure over program fields, shared via the program cache
+    (jax caches executables on the function object)."""
+    T, lane = prog.T, cost.lane
+    n_pad, n_out = prog.n_pad, prog.n_out
+    leak_shift = prog.leak_shift
+    groups_used = n_pad // lane
+    w_padded = prog.w_padded                                    # (N_in, n_pad)
+    thr_grouped = prog.thr_padded.reshape(groups_used, lane)
+    plan = prog.decode
+
+    def lif_grouped(currents: jnp.ndarray, want_history: bool):
+        """currents (T, B, G, lane) -> (LIFResult over (B, G, lane), vs|None)."""
+        from repro.core.lif_dynamics import lif_scan
+        if want_history:
+            return lif_scan(currents, thr_grouped, leak_shift, T,
+                            return_v_history=True)
+        if kernel == "pallas":
+            from repro.kernels.lif import ops as lif_ops
+            Tc, B = currents.shape[:2]
+            res = lif_ops.lif_fused(currents.reshape(Tc, B, n_pad),
+                                    thr_grouped.reshape(n_pad),
+                                    leak_shift)
+            shaped = lambda a: a.reshape(B, groups_used, lane)
+            return res._replace(first_spike=shaped(res.first_spike),
+                                v_final=shaped(res.v_final)), None
+        return lif_scan(currents, thr_grouped, leak_shift, T), None
+
+    def core_impl(times: jnp.ndarray):
+        """times (B, N_in) int32 -> (labels, first_l, v_l, steps)."""
+        B = times.shape[0]
+        raster = ttfs.frames_from_times(times, T)               # (B, T, N_in)
+        cur = jax.lax.dot_general(raster, w_padded,
+                                  (((2,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        cur = jnp.moveaxis(cur, 1, 0).reshape(T, B, groups_used, lane)
+        res, vs = lif_grouped(cur, want_history=latency_mode)
+        first = res.first_spike.reshape(B, n_pad)
+        first_l = first[:, :n_out]
+        if latency_mode:
+            # TTFS decision point: stop at the first output spike. Gather the
+            # membrane at each row's exit tick and mask spikes the scheduler
+            # never saw — identical to the per-image early stop.
+            t_first = jnp.min(first_l, axis=1)                  # (B,)
+            steps = jnp.where(t_first < T, t_first + 1, T).astype(jnp.int32)
+            v_exit = jnp.take_along_axis(
+                jnp.moveaxis(vs.reshape(T, B, n_pad), 0, 1),
+                (steps - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+            first_l = jnp.where(first_l <= t_first[:, None], first_l, T)
+            v_l = v_exit[:, :n_out]
+        else:
+            steps = jnp.full((B,), T, jnp.int32)
+            v_l = res.v_final.reshape(B, n_pad)[:, :n_out]
+        labels = decode_output(first_l, v_l, plan)
+        return labels, first_l, v_l, steps
+
+    return jax.jit(core_impl)
+
+
 class SNNBoardBatched:
-    def __init__(self, artifact: Artifact, *, latency_mode: bool = False,
+    def __init__(self, artifact: Artifact | LoweredProgram, *,
+                 latency_mode: bool = False,
                  kernel: str = "jnp", cost: BoardCostModel = PYNQ_COST):
         if kernel not in ("jnp", "pallas"):
             raise ValueError(
@@ -44,15 +111,17 @@ class SNNBoardBatched:
                 f"'pallas' — registry specs 'board-batched-jnp' / "
                 f"'board-batched-pallas'; 'fused' is an accelerator-family "
                 f"kernel)")
-        self.art = artifact
+        prog = lower(artifact)
+        self.program = prog
+        self.art = prog.artifact
         self.cost = cost
         self.kernel = kernel
         self.latency_mode = bool(latency_mode)
-        self.T = int(artifact.m("encode", "T"))
-        self.x_min = float(artifact.m("encode", "x_min"))
-        self.n_out = int(artifact.m("model", "n_out"))
-        self.depth = int(artifact.m("events", "e_max"))
-        n_pad = int(artifact["thr_padded"].shape[0])
+        self.T = prog.T
+        self.x_min = prog.x_min
+        self.n_out = prog.n_out
+        self.depth = prog.e_max
+        n_pad = prog.n_pad
         if n_pad % cost.lane:
             raise ValueError(f"n_pad {n_pad} not lane-aligned ({cost.lane})")
         self.groups_used = n_pad // cost.lane
@@ -60,64 +129,16 @@ class SNNBoardBatched:
             raise ValueError(f"network needs {self.groups_used} groups; the "
                              f"board has {cost.groups}")
         self.n_pad = n_pad
-        self.w_padded = jnp.asarray(artifact["w_padded"])       # (N_in, n_pad)
-        self.thr_grouped = jnp.asarray(artifact["thr_padded"]).reshape(
-            self.groups_used, cost.lane)
-        self._core = jax.jit(self._core_impl)
+        self.w_padded = prog.w_padded                           # (N_in, n_pad)
+        self.thr_grouped = prog.thr_padded.reshape(self.groups_used,
+                                                   cost.lane)
+        self._core, self.cache_hit = PROGRAM_CACHE.bundle(
+            ("board-batched", prog.fingerprint, kernel,
+             self.latency_mode, cost),
+            lambda: _build_core(prog, kernel, self.latency_mode, cost))
         self.last_trace: BoardTrace | None = None
         # per-forward (B, T) dispatch histogram — the trace detector's input
         self.last_tick_counts: np.ndarray | None = None
-
-    # ------------------------------------------------------------ device core
-    def _lif_grouped(self, currents: jnp.ndarray, want_history: bool):
-        """currents (T, B, G, lane) -> (LIFResult over (B, G, lane), vs|None)."""
-        leak_shift = int(self.art.m("lif", "leak_shift"))
-        if want_history:
-            return lif_scan(currents, self.thr_grouped, leak_shift, self.T,
-                            return_v_history=True)
-        if self.kernel == "pallas":
-            from repro.kernels.lif import ops as lif_ops
-            T, B = currents.shape[:2]
-            res = lif_ops.lif_fused(currents.reshape(T, B, self.n_pad),
-                                    self.thr_grouped.reshape(self.n_pad),
-                                    leak_shift)
-            shaped = lambda a: a.reshape(B, self.groups_used, self.cost.lane)
-            return res._replace(first_spike=shaped(res.first_spike),
-                                v_final=shaped(res.v_final)), None
-        return lif_scan(currents, self.thr_grouped, leak_shift, self.T), None
-
-    def _core_impl(self, times: jnp.ndarray):
-        """times (B, N_in) int32 -> (labels, first_l, v_l, steps)."""
-        T, lane = self.T, self.cost.lane
-        B = times.shape[0]
-        raster = ttfs.frames_from_times(times, T)               # (B, T, N_in)
-        cur = jax.lax.dot_general(raster, self.w_padded,
-                                  (((2,), (0,)), ((), ())),
-                                  preferred_element_type=jnp.int32)
-        cur = jnp.moveaxis(cur, 1, 0).reshape(T, B, self.groups_used, lane)
-        res, vs = self._lif_grouped(cur, want_history=self.latency_mode)
-        first = res.first_spike.reshape(B, self.n_pad)
-        first_l = first[:, :self.n_out]
-        if self.latency_mode:
-            # TTFS decision point: stop at the first output spike. Gather the
-            # membrane at each row's exit tick and mask spikes the scheduler
-            # never saw — identical to the per-image early stop.
-            t_first = jnp.min(first_l, axis=1)                  # (B,)
-            steps = jnp.where(t_first < T, t_first + 1, T).astype(jnp.int32)
-            v_exit = jnp.take_along_axis(
-                jnp.moveaxis(vs.reshape(T, B, self.n_pad), 0, 1),
-                (steps - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
-            first_l = jnp.where(first_l <= t_first[:, None], first_l, T)
-            v_l = v_exit[:, :self.n_out]
-        else:
-            steps = jnp.full((B,), T, jnp.int32)
-            v_l = res.v_final.reshape(B, self.n_pad)[:, :self.n_out]
-        labels = ttfs.decode_labels(
-            first_l, v_l,
-            n_groups=self.art.m("readout", "n_groups"),
-            per_group=self.art.m("readout", "per_group"),
-            sentinel=T, fallback=self.art.m("readout", "fallback"))
-        return labels, first_l, v_l, steps
 
     # ------------------------------------------------------------- host front
     def forward(self, images) -> SNNOutput:
@@ -142,7 +163,7 @@ class SNNBoardBatched:
                         parent=fwd.sid) if fwd is not None else None
         labels, first_l, v_l, steps = self._core(jnp.asarray(times))
         steps_np = np.asarray(steps, np.int64)
-        counts = _step_counts(times, self.T)[:, :self.T].astype(np.int64)
+        counts = step_counts(times, self.T)[:, :self.T].astype(np.int64)
         self.last_tick_counts = counts
         cum = np.zeros((counts.shape[0], self.T + 1), np.int64)
         np.cumsum(counts, axis=1, out=cum[:, 1:])

@@ -49,11 +49,21 @@ class GroupedNeuronCore:
         self.reset()
 
     @classmethod
+    def from_program(cls, program,
+                     cost: BoardCostModel = PYNQ_COST) -> "GroupedNeuronCore":
+        """Build from a lowered program (``core.lowering.LoweredProgram``).
+        Uses the artifact's host arrays — the core owns mutable int32/int8
+        copies (``.astype`` below), so fault models may write ``core.thr``
+        without touching the shared program arrays."""
+        art = program.artifact
+        return cls(np.asarray(art["w_padded"]), np.asarray(art["thr_padded"]),
+                   program.leak_shift, program.T, cost)
+
+    @classmethod
     def from_artifact(cls, art: Artifact,
                       cost: BoardCostModel = PYNQ_COST) -> "GroupedNeuronCore":
-        return cls(np.asarray(art["w_padded"]), np.asarray(art["thr_padded"]),
-                   int(art.m("lif", "leak_shift")), int(art.m("encode", "T")),
-                   cost)
+        from repro.core.lowering import lower
+        return cls.from_program(lower(art), cost)
 
     def reset(self) -> None:
         self.v = np.zeros((self.groups_used, self.lane), np.int32)

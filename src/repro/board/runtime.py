@@ -30,21 +30,25 @@ from repro.board.neuron_core import GroupedNeuronCore
 from repro.core import ttfs
 from repro.core.artifact import Artifact
 from repro.core.hw import BoardCostModel, PYNQ_COST
-from repro.core.reference import SNNOutput
+from repro.core.lowering import LoweredProgram, lower
+from repro.core.types import SNNOutput, decode_output
 from repro.telemetry import trace as ttrace
 
 
 class SNNBoard:
-    def __init__(self, artifact: Artifact, *, latency_mode: bool = False,
+    def __init__(self, artifact: Artifact | LoweredProgram, *,
+                 latency_mode: bool = False,
                  cost: BoardCostModel = PYNQ_COST, faults=None):
-        self.art = artifact
+        prog = lower(artifact)
+        self.program = prog
+        self.art = prog.artifact
         self.cost = cost
         self.latency_mode = bool(latency_mode)
-        self.T = int(artifact.m("encode", "T"))
-        self.x_min = float(artifact.m("encode", "x_min"))
-        self.n_out = int(artifact.m("model", "n_out"))
-        self.depth = int(artifact.m("events", "e_max"))
-        self.core = GroupedNeuronCore.from_artifact(artifact, cost)
+        self.T = prog.T
+        self.x_min = prog.x_min
+        self.n_out = prog.n_out
+        self.depth = prog.e_max
+        self.core = GroupedNeuronCore.from_program(prog, cost)
         self.n_pad = self.core.n_pad
         # dynamic fault plan (repro.faults.FaultPlan), interpreted per image
         # by the tick loop; None / a clean plan leaves the datapath bit-exact
@@ -146,11 +150,7 @@ class SNNBoard:
         dec = rec.begin("board.decode", "accel", trace=fwd.trace,
                         parent=fwd.sid, attrs={"n_out": self.n_out}) \
             if fwd is not None else None
-        labels = np.asarray(ttfs.decode_labels(
-            first_l, v_l,
-            n_groups=self.art.m("readout", "n_groups"),
-            per_group=self.art.m("readout", "per_group"),
-            sentinel=self.T, fallback=self.art.m("readout", "fallback")))
+        labels = np.asarray(decode_output(first_l, v_l, self.program.decode))
         rec.end(dec)
         rec.end(fwd)
         return SNNOutput(labels=labels, first_spike=first_l, v_final=v_l,

@@ -6,6 +6,11 @@ the same artifact and adversarial image batch, asserting:
   registry      — ``runtimes.registry_consistency_errors`` is empty: what the
                   registry advertises constructs, and what constructs is
                   advertised (both directions);
+  lowering      — the single lowering stage (``core.lowering``) is
+                  deterministic: two cache-bypassing lowerings agree on the
+                  program fingerprint and every scalar, the process cache
+                  returns the same program, and every advertised runtime's
+                  ``.program`` carries that one fingerprint;
   differential  — labels, first-spike times, final membranes AND step counts
                   are bit-exact against the software reference for every spec
                   (alias specs must construct an identical runtime config and
@@ -139,6 +144,9 @@ def run_case(case: FuzzedCase, specs=ADVERTISED_SPECS,
     errs = registry_consistency_errors(art)
     outcomes.append(OracleOutcome("registry", "*", not errs, "; ".join(errs)))
 
+    # ---- lowering: deterministic, and every runtime consumes ONE program -
+    outcomes.append(_lowering_oracle(art, specs))
+
     # ---- differential: every advertised spec vs the reference ------------
     ref_rt = make_runtime(art, "reference")
     out_ref = ref_rt.forward(images)
@@ -262,6 +270,45 @@ def run_case(case: FuzzedCase, specs=ADVERTISED_SPECS,
 
     return ConformanceReport(seed=case.seed, notes=case.notes,
                              outcomes=outcomes)
+
+
+def _lowering_oracle(art, specs) -> OracleOutcome:
+    """Lowering conformance: the single lowering stage is deterministic and
+    really is single. Two independent (cache-bypassing) lowerings of the
+    same artifact must agree on the program fingerprint and every scalar;
+    the cached path must return that same program; and every advertised
+    runtime must carry a ``program`` whose fingerprint matches — i.e. no
+    runtime lowered its own divergent view of the artifact."""
+    from repro.core.lowering import lower
+
+    errs: list[str] = []
+    a = lower(art, cache=False)
+    b = lower(art, cache=False)
+    if a.fingerprint != b.fingerprint:
+        errs.append(f"lowering is nondeterministic: {a.fingerprint[:12]} != "
+                    f"{b.fingerprint[:12]}")
+    scalars = ("T", "x_min", "e_max", "leak_shift", "n_in", "n_out",
+               "n_groups", "per_group", "fallback", "scale", "n_pad", "lane")
+    for f in scalars:
+        if getattr(a, f) != getattr(b, f):
+            errs.append(f"lowered scalar {f} differs across runs: "
+                        f"{getattr(a, f)!r} vs {getattr(b, f)!r}")
+    cached = lower(art)
+    if cached.fingerprint != a.fingerprint:
+        errs.append("cached lowering disagrees with a fresh lowering")
+    for spec in specs:
+        try:
+            rt = make_runtime(art, spec)
+        except Exception:
+            continue  # construction failures are the registry oracle's find
+        prog = getattr(rt, "program", None)
+        if prog is None:
+            errs.append(f"runtime {spec!r} exposes no lowered program")
+        elif prog.fingerprint != a.fingerprint:
+            errs.append(f"runtime {spec!r} lowered a divergent program "
+                        f"({prog.fingerprint[:12]} != {a.fingerprint[:12]})")
+    return OracleOutcome("lowering", "*", not errs, "; ".join(errs),
+                         {"fingerprint": a.fingerprint[:16]})
 
 
 def _telemetry_oracle(case: FuzzedCase, py_slice: int) -> OracleOutcome:

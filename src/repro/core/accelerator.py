@@ -23,12 +23,14 @@ conversion stage) and executes the padded block layout the planner emitted:
     pass, state resident on-chip, the (T, N_pad) currents tensor never
     materialized. All are bit-exact against the reference; tests assert they
     agree.
+
+Execution parameters come from the lowered program (``core.lowering``); the
+jitted callables live in the process-wide program cache keyed by
+(program fingerprint, mode, kernel), so every serving lane over the same
+artifact shares one compiled pipeline.
 """
 
 from __future__ import annotations
-
-import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +40,117 @@ from repro.core import ttfs
 from repro.core.artifact import Artifact
 from repro.core.events import EventFrames, PAD, pack_events_batched
 from repro.core.lif_dynamics import lif_scan, lif_scan_early_exit
-from repro.core.reference import SNNOutput, _decode
+from repro.core.lowering import PROGRAM_CACHE, LoweredProgram, lower
+from repro.core.types import SNNOutput, decode_output
 from repro.telemetry import trace as ttrace
 
 
+def _build_bundle(prog: LoweredProgram, mode: str, kernel: str) -> dict:
+    """Jitted pipelines for one (program, mode, kernel) config. Module-level
+    closures over program fields — never methods — so two runtime instances
+    with the same config share the compiled executables."""
+    T, x_min, leak_shift = prog.T, prog.x_min, prog.leak_shift
+    n_out = prog.n_out
+    w_padded, thr_padded = prog.w_padded, prog.thr_padded
+    plan = prog.decode
+
+    # ------------------------------------------------------------ batch mode
+    def currents_batch(raster: jnp.ndarray) -> jnp.ndarray:
+        """(B, T, N_in) int8 raster -> (T, B, N_pad) int32 currents."""
+        if kernel == "pallas":
+            from repro.kernels.spike_matmul import ops as smm
+            cur = smm.spike_matmul(raster, w_padded)           # (B, T, N_pad)
+        else:
+            cur = jax.lax.dot_general(raster, w_padded,
+                                      (((2,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.int32)
+        return jnp.moveaxis(cur, 1, 0)
+
+    def lif(currents: jnp.ndarray):
+        """(T, ..., N_pad) -> LIFResult via fused kernel or its jnp mirror."""
+        if kernel == "pallas":
+            from repro.kernels.lif import ops as lif_ops
+            return lif_ops.lif_fused(currents, thr_padded, leak_shift)
+        return lif_scan(currents, thr_padded, leak_shift, T)
+
+    def decode_padded(first, v_final):
+        first_l, v_l = first[..., :n_out], v_final[..., :n_out]
+        if kernel == "pallas":
+            from repro.kernels.ttfs_decode import ops as dec_ops
+            labels = dec_ops.ttfs_decode(
+                first_l, v_l,
+                n_groups=plan.n_groups, per_group=plan.per_group,
+                sentinel=plan.sentinel, fallback=plan.fallback)
+        else:
+            labels = decode_output(first_l, v_l, plan)
+        return labels, first_l, v_l
+
+    def forward_batch(images: jnp.ndarray) -> SNNOutput:
+        times = ttfs.encode_ttfs(images, T, x_min)
+        raster = ttfs.frames_from_times(times, T)
+        currents = currents_batch(raster)
+        res = lif(currents)
+        labels, first_l, v_l = decode_padded(res.first_spike, res.v_final)
+        steps = jnp.full(labels.shape, T, jnp.int32)
+        return SNNOutput(labels, first_l, v_l, steps)
+
+    # ------------------------------------------------------------ event mode
+    def event_currents(ids: jnp.ndarray) -> jnp.ndarray:
+        """(T, E_max) event ids -> (T, N_pad) int32 currents via row gather."""
+        if kernel == "pallas":
+            from repro.kernels.event_accum import ops as ea
+            return ea.event_accum(ids, w_padded)
+        safe = jnp.maximum(ids, 0)
+        rows = w_padded[safe].astype(jnp.int32)                 # (T, E, N_pad)
+        mask = (ids != PAD)[..., None]
+        return jnp.sum(jnp.where(mask, rows, 0), axis=1)
+
+    def forward_event(ids: jnp.ndarray, count: jnp.ndarray) -> SNNOutput:
+        """ids: (B, T, E_max), count: (B, T).
+        Full-T evaluation (throughput/accuracy mode)."""
+        if kernel == "fused":
+            from repro.kernels.fused_event_lif import ops as fused
+            res, labels = fused.fused_event_lif_decode(
+                ids, count, w_padded, thr_padded, leak_shift,
+                n_out=n_out, n_groups=plan.n_groups,
+                per_group=plan.per_group, fallback=plan.fallback)
+            first_l = res.first_spike[..., :n_out]
+            v_l = res.v_final[..., :n_out]
+            steps = jnp.full(labels.shape, T, jnp.int32)
+            return SNNOutput(labels, first_l, v_l, steps)
+        currents = jax.vmap(event_currents)(ids)                # (B, T, N_pad)
+        res = lif(jnp.moveaxis(currents, 1, 0))
+        labels, first_l, v_l = decode_padded(res.first_spike, res.v_final)
+        steps = jnp.full(labels.shape, T, jnp.int32)
+        return SNNOutput(labels, first_l, v_l, steps)
+
+    def forward_event_one_early_exit(ids: jnp.ndarray) -> SNNOutput:
+        """ids: (T, E_max), single example, stop at first output spike."""
+        currents = event_currents(ids)                          # (T, N_pad)
+        res, steps = lif_scan_early_exit(currents, thr_padded, leak_shift, T)
+        labels, first_l, v_l = decode_padded(res.first_spike, res.v_final)
+        return SNNOutput(labels, first_l, v_l, steps)
+
+    def forward_event_latency(ids: jnp.ndarray,
+                              count: jnp.ndarray) -> SNNOutput:
+        """(B, T, E_max) frames, stop each row at its first output spike."""
+        if kernel == "fused":
+            from repro.kernels.fused_event_lif import ops as fused
+            res, steps = fused.fused_event_lif_early_exit(
+                ids, count, w_padded, thr_padded, leak_shift)
+            labels, first_l, v_l = decode_padded(res.first_spike, res.v_final)
+            return SNNOutput(labels, first_l, v_l, steps)
+        return jax.vmap(forward_event_one_early_exit)(ids)
+
+    if mode == "batch":
+        return {"batch": jax.jit(forward_batch)}
+    return {"event": jax.jit(forward_event),
+            "event_latency": jax.jit(forward_event_latency)}
+
+
 class SNNAccelerator:
-    def __init__(self, artifact: Artifact, mode: str = "batch",
-                 kernel: str = "jnp"):
+    def __init__(self, artifact: Artifact | LoweredProgram,
+                 mode: str = "batch", kernel: str = "jnp"):
         if mode not in ("batch", "event"):
             raise ValueError(mode)
         if kernel not in ("jnp", "pallas", "fused"):
@@ -53,111 +159,25 @@ class SNNAccelerator:
             raise ValueError(
                 "the fused megakernel consumes packed event frames; "
                 "use mode='event' (batch mode has its own matmul pipeline)")
-        self.art = artifact
+        prog = lower(artifact)
+        self.program = prog
+        self.art = prog.artifact
         self.mode, self.kernel = mode, kernel
-        self.T = int(artifact.m("encode", "T"))
-        self.x_min = float(artifact.m("encode", "x_min"))
-        self.leak_shift = int(artifact.m("lif", "leak_shift"))
-        self.e_max = int(artifact.m("events", "e_max"))
-        self.n_out = int(artifact.m("model", "n_out"))
-        self.w_padded = jnp.asarray(artifact["w_padded"])      # (N_in, N_pad) int8
-        self.thr_padded = jnp.asarray(artifact["thr_padded"])  # (N_pad,) int32
-        self._fwd_batch = jax.jit(self._forward_batch)
-        self._fwd_event = jax.jit(self._forward_event)
-        self._fwd_event_latency = jax.jit(self._forward_event_latency)
-
-    # ------------------------------------------------------------ batch mode
-    def _currents_batch(self, raster: jnp.ndarray) -> jnp.ndarray:
-        """(B, T, N_in) int8 raster -> (T, B, N_pad) int32 currents."""
-        if self.kernel == "pallas":
-            from repro.kernels.spike_matmul import ops as smm
-            cur = smm.spike_matmul(raster, self.w_padded)      # (B, T, N_pad)
+        self.T = prog.T
+        self.x_min = prog.x_min
+        self.leak_shift = prog.leak_shift
+        self.e_max = prog.e_max
+        self.n_out = prog.n_out
+        self.w_padded = prog.w_padded          # (N_in, N_pad) int8
+        self.thr_padded = prog.thr_padded      # (N_pad,) int32
+        bundle, self.cache_hit = PROGRAM_CACHE.bundle(
+            ("accelerator", prog.fingerprint, mode, kernel),
+            lambda: _build_bundle(prog, mode, kernel))
+        if mode == "batch":
+            self._fwd_batch = bundle["batch"]
         else:
-            cur = jax.lax.dot_general(raster, self.w_padded,
-                                      (((2,), (0,)), ((), ())),
-                                      preferred_element_type=jnp.int32)
-        return jnp.moveaxis(cur, 1, 0)
-
-    def _lif(self, currents: jnp.ndarray):
-        """(T, ..., N_pad) -> LIFResult via fused kernel or its jnp mirror."""
-        if self.kernel == "pallas":
-            from repro.kernels.lif import ops as lif_ops
-            return lif_ops.lif_fused(currents, self.thr_padded, self.leak_shift)
-        return lif_scan(currents, self.thr_padded, self.leak_shift, self.T)
-
-    def _decode_padded(self, first, v_final):
-        first_l, v_l = first[..., :self.n_out], v_final[..., :self.n_out]
-        if self.kernel == "pallas":
-            from repro.kernels.ttfs_decode import ops as dec_ops
-            labels = dec_ops.ttfs_decode(
-                first_l, v_l,
-                n_groups=self.art.m("readout", "n_groups"),
-                per_group=self.art.m("readout", "per_group"),
-                sentinel=self.T, fallback=self.art.m("readout", "fallback"))
-        else:
-            labels = _decode(self.art, first_l, v_l)
-        return labels, first_l, v_l
-
-    def _forward_batch(self, images: jnp.ndarray) -> SNNOutput:
-        times = ttfs.encode_ttfs(images, self.T, self.x_min)
-        raster = ttfs.frames_from_times(times, self.T)
-        currents = self._currents_batch(raster)
-        res = self._lif(currents)
-        labels, first_l, v_l = self._decode_padded(res.first_spike, res.v_final)
-        steps = jnp.full(labels.shape, self.T, jnp.int32)
-        return SNNOutput(labels, first_l, v_l, steps)
-
-    # ------------------------------------------------------------ event mode
-    def _event_currents(self, ids: jnp.ndarray) -> jnp.ndarray:
-        """(T, E_max) event ids -> (T, N_pad) int32 currents via row gather."""
-        if self.kernel == "pallas":
-            from repro.kernels.event_accum import ops as ea
-            return ea.event_accum(ids, self.w_padded)
-        safe = jnp.maximum(ids, 0)
-        rows = self.w_padded[safe].astype(jnp.int32)            # (T, E, N_pad)
-        mask = (ids != PAD)[..., None]
-        return jnp.sum(jnp.where(mask, rows, 0), axis=1)
-
-    def _forward_event(self, ids: jnp.ndarray, count: jnp.ndarray) -> SNNOutput:
-        """ids: (B, T, E_max), count: (B, T).
-        Full-T evaluation (throughput/accuracy mode)."""
-        if self.kernel == "fused":
-            from repro.kernels.fused_event_lif import ops as fused
-            res, labels = fused.fused_event_lif_decode(
-                ids, count, self.w_padded, self.thr_padded, self.leak_shift,
-                n_out=self.n_out,
-                n_groups=self.art.m("readout", "n_groups"),
-                per_group=self.art.m("readout", "per_group"),
-                fallback=self.art.m("readout", "fallback"))
-            first_l = res.first_spike[..., :self.n_out]
-            v_l = res.v_final[..., :self.n_out]
-            steps = jnp.full(labels.shape, self.T, jnp.int32)
-            return SNNOutput(labels, first_l, v_l, steps)
-        currents = jax.vmap(self._event_currents)(ids)          # (B, T, N_pad)
-        res = self._lif(jnp.moveaxis(currents, 1, 0))
-        labels, first_l, v_l = self._decode_padded(res.first_spike, res.v_final)
-        steps = jnp.full(labels.shape, self.T, jnp.int32)
-        return SNNOutput(labels, first_l, v_l, steps)
-
-    def _forward_event_latency(self, ids: jnp.ndarray,
-                               count: jnp.ndarray) -> SNNOutput:
-        """(B, T, E_max) frames, stop each row at its first output spike."""
-        if self.kernel == "fused":
-            from repro.kernels.fused_event_lif import ops as fused
-            res, steps = fused.fused_event_lif_early_exit(
-                ids, count, self.w_padded, self.thr_padded, self.leak_shift)
-            labels, first_l, v_l = self._decode_padded(res.first_spike,
-                                                       res.v_final)
-            return SNNOutput(labels, first_l, v_l, steps)
-        return jax.vmap(self._forward_event_one_early_exit)(ids)
-
-    def _forward_event_one_early_exit(self, ids: jnp.ndarray) -> SNNOutput:
-        """ids: (T, E_max), single example, stop at first output spike."""
-        currents = self._event_currents(ids)                    # (T, N_pad)
-        res, steps = lif_scan_early_exit(currents, self.thr_padded,
-                                         self.leak_shift, self.T)
-        labels, first_l, v_l = self._decode_padded(res.first_spike, res.v_final)
-        return SNNOutput(labels, first_l, v_l, steps)
+            self._fwd_event = bundle["event"]
+            self._fwd_event_latency = bundle["event_latency"]
 
     # -------------------------------------------------------------- frontend
     def forward(self, images=None, frames: EventFrames | None = None,

@@ -24,7 +24,7 @@ import numpy as np
 FORMAT_VERSION = 2
 
 
-def _array_hash(a: np.ndarray) -> str:
+def array_hash(a: np.ndarray) -> str:
     h = hashlib.sha256()
     h.update(str(a.dtype).encode())
     h.update(str(a.shape).encode())
@@ -42,14 +42,14 @@ class Artifact:
         h = hashlib.sha256()
         for name in sorted(self.arrays):
             h.update(name.encode())
-            h.update(_array_hash(self.arrays[name]).encode())
+            h.update(array_hash(self.arrays[name]).encode())
         h.update(json.dumps(_strip_volatile(self.meta), sort_keys=True).encode())
         return h.hexdigest()
 
     def save(self, path: str) -> str:
         meta = dict(self.meta)
         meta["format_version"] = FORMAT_VERSION
-        meta["manifest"] = {k: _array_hash(v) for k, v in self.arrays.items()}
+        meta["manifest"] = {k: array_hash(v) for k, v in self.arrays.items()}
         self.meta = meta
         meta["fingerprint"] = self.fingerprint()
         buf = io.BytesIO()
@@ -82,7 +82,7 @@ class Artifact:
                 parts.append(f"manifest entries with no array: {orphaned}")
             raise IntegrityError("; ".join(parts))
         bad = [name for name, digest in manifest.items()
-               if _array_hash(self.arrays[name]) != digest]
+               if array_hash(self.arrays[name]) != digest]
         if bad:
             raise IntegrityError(
                 f"array content hash mismatch for {bad} — the array bytes or "

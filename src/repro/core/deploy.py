@@ -137,6 +137,12 @@ def export(model: snn.SNN, path: str | None = None, *,
     arrays = {"w_float": w_f32, "w_int8": w_int8, "thresholds": thr,
               "group_ids": gids, **layout}
     art = Artifact(meta, arrays)
+    # calibration gate: every export must lower — run the single lowering
+    # stage (uncached: no point warming the process cache with a fingerprint
+    # that save() is about to restamp) so a malformed export fails HERE, at
+    # the producer, not inside whichever runtime first consumes it
+    from repro.core.lowering import lower
+    lower(art, cache=False)
     if path is not None:
         art.save(path)
     else:

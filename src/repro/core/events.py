@@ -59,7 +59,7 @@ def pack_events(times: np.ndarray, T: int, e_max: int) -> EventFrames:
     return EventFrames(jnp.asarray(ids), jnp.asarray(count), jnp.asarray(overflow))
 
 
-def _step_counts(times: np.ndarray, T: int) -> np.ndarray:
+def step_counts(times: np.ndarray, T: int) -> np.ndarray:
     """(B, N) int spike times -> (B, T+1) events per step (bin T absorbs the
     never-spikes sentinel). One flat bincount: O(B*N), no python loop over T."""
     B, N = times.shape
@@ -79,7 +79,7 @@ def pack_events_batched(times: np.ndarray, T: int, e_max: int) -> EventFrames:
     sorted_t = np.take_along_axis(times, order, axis=1)       # (B, N)
     # position of each event within its timestep: exclusive cumsum of per-step
     # counts gives step_start[:, t] = #events with time < t
-    counts = _step_counts(times, T)
+    counts = step_counts(times, T)
     step_start = np.zeros((B, T + 1), dtype=np.int64)
     np.cumsum(counts[:, :T], axis=1, out=step_start[:, 1:])
     ids = np.full((B, T, e_max), PAD, dtype=np.int32)
@@ -100,7 +100,7 @@ def calibrate_e_max(times: np.ndarray, T: int, lane: int = 128,
     """Pick E_max from calibration data: max simultaneous events per step,
     scaled by headroom, rounded up to a lane multiple. Stored in the artifact."""
     times = np.asarray(times)
-    peak = int(_step_counts(times, T)[:, :T].max()) if T > 0 else 0
+    peak = int(step_counts(times, T)[:, :T].max()) if T > 0 else 0
     e = int(np.ceil(peak * headroom))
     return max(lane, ((e + lane - 1) // lane) * lane)
 

@@ -1,0 +1,301 @@
+"""The one lowering stage: ``Artifact → LoweredProgram``.
+
+The paper's single-artifact contract says ONE exported object carries
+weights, thresholds, connectivity and grouped TTFS decode metadata unchanged
+from software definition to board execution. This module is where that
+contract becomes code: ``lower(artifact)`` validates and coerces the meta
+ONCE into a frozen, fingerprinted ``LoweredProgram``, and every runtime
+family (reference, accelerator batch/event, board-py, board-batched, the
+serving scheduler's host packer, the fault detectors) consumes the program
+instead of re-reading ``artifact.m(...)`` at seven-plus sites.
+
+Two cache tiers hang off the lowering stage, both process-wide and keyed by
+content, never by object identity:
+
+  * program cache — ``artifact.fingerprint() → LoweredProgram``. The
+    fingerprint is recomputed from the actual array bytes + volatile-stripped
+    meta, so a fault-pass clone (different bytes) can never alias the
+    pristine program.
+  * bundle cache — ``(family, program fingerprint, mode/kernel/latency/cost)
+    → jitted-callable bundle``. jax caches compiled executables on the
+    FUNCTION OBJECT, so sharing the bundle across runtime instances (e.g.
+    every serving lane, including watchdog-spawned replacements) means one
+    compile per distinct config per process instead of one per lane.
+
+Static fault plans are a lowering pass: ``lower_with_faults`` corrupts an
+in-memory CLONE of the artifact (pristine artifact untouched — it backs the
+scrub/reload recovery path) and lowers the clone; dynamic plans stay a
+board-py runtime concern and never enter this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import threading
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.artifact import Artifact
+from repro.core.hw import PYNQ_COST, BoardCostModel
+from repro.core.types import DecodePlan, EncodePlan
+
+
+class LoweringError(ValueError):
+    """The artifact's metadata or arrays do not lower to a valid program."""
+
+
+_MISSING = object()
+
+
+def _meta(art: Artifact, path: tuple[str, ...], kind: str):
+    """One coercion point for every execution parameter the runtimes used to
+    read ad hoc: missing paths and junk values fail HERE, at lowering time,
+    with the offending meta path named — not deep inside a jitted forward."""
+    val = art.m(*path, default=_MISSING)
+    if val is _MISSING:
+        raise LoweringError(f"artifact meta missing {'.'.join(path)!r}")
+    if kind == "int":
+        if isinstance(val, bool):
+            raise LoweringError(f"meta {'.'.join(path)!r}={val!r} "
+                                f"does not lower to int")
+        if isinstance(val, (int, np.integer)):
+            return int(val)
+        if isinstance(val, (float, np.floating)):
+            if float(val).is_integer():
+                return int(val)
+            raise LoweringError(f"meta {'.'.join(path)!r}={val!r} "
+                                f"does not lower to int")
+        if isinstance(val, str):
+            try:
+                return int(val, 10)
+            except ValueError:
+                raise LoweringError(f"meta {'.'.join(path)!r}={val!r} "
+                                    f"does not lower to int") from None
+        raise LoweringError(f"meta {'.'.join(path)!r}={val!r} "
+                            f"does not lower to int")
+    if kind == "float":
+        if isinstance(val, bool):
+            raise LoweringError(f"meta {'.'.join(path)!r}={val!r} "
+                                f"does not lower to float")
+        try:
+            out = float(val)
+        except (TypeError, ValueError):
+            raise LoweringError(f"meta {'.'.join(path)!r}={val!r} "
+                                f"does not lower to float") from None
+        if not np.isfinite(out):
+            raise LoweringError(f"meta {'.'.join(path)!r}={val!r} "
+                                f"is not finite")
+        return out
+    if kind == "str":
+        if not isinstance(val, str):
+            raise LoweringError(f"meta {'.'.join(path)!r}={val!r} "
+                                f"does not lower to str")
+        return val
+    raise AssertionError(kind)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LoweredProgram:
+    """Frozen execution view of one deployment artifact.
+
+    Everything a runtime needs to execute — typed scalars, device-ready
+    arrays, the encode/decode plans, the cost-model binding — validated and
+    coerced once. ``artifact`` is the back-reference the integrity detectors
+    re-hash; runtimes keep ``self.art = program.artifact`` for exactly that.
+    """
+
+    fingerprint: str          # program identity (derives from the artifact's)
+    artifact: Artifact        # back-ref for integrity re-hashing / export
+    # ---- typed scalars ----
+    T: int
+    x_min: float
+    e_max: int
+    leak_shift: int
+    n_in: int
+    n_out: int
+    n_groups: int
+    per_group: int
+    fallback: str
+    scale: float              # quantization scale (dense int8 baseline)
+    n_pad: int                # padded output width (lane-aligned)
+    lane: int                 # blocked-layout lane width from the planner
+    # ---- device-ready arrays ----
+    w_float: jnp.ndarray      # (N_in, N_out) fp32
+    w_int8: jnp.ndarray       # (N_in, N_out) int8
+    thresholds: jnp.ndarray   # (N_out,) int32
+    w_padded: jnp.ndarray     # (N_in, N_pad) int8 — blocked layout
+    thr_padded: jnp.ndarray   # (N_pad,) int32
+    # ---- stage plans + cost binding ----
+    encode: EncodePlan
+    decode: DecodePlan
+    cost: BoardCostModel
+
+    def host_arrays(self) -> dict[str, np.ndarray]:
+        """The artifact's raw numpy arrays (host side, never device)."""
+        return self.artifact.arrays
+
+
+def _program_fingerprint(art_fp: str, scalars: dict[str, Any]) -> str:
+    h = hashlib.sha256()
+    h.update(art_fp.encode())
+    h.update(json.dumps(scalars, sort_keys=True).encode())
+    return h.hexdigest()
+
+
+REQUIRED_ARRAYS = ("w_float", "w_int8", "thresholds", "w_padded",
+                   "thr_padded")
+
+
+def _lower_uncached(art: Artifact) -> LoweredProgram:
+    missing = [n for n in REQUIRED_ARRAYS if n not in art.arrays]
+    if missing:
+        raise LoweringError(f"artifact is missing arrays {missing}")
+    T = _meta(art, ("encode", "T"), "int")
+    if T <= 0:
+        raise LoweringError(f"encode.T={T} must be positive")
+    x_min = _meta(art, ("encode", "x_min"), "float")
+    e_max = _meta(art, ("events", "e_max"), "int")
+    leak_shift = _meta(art, ("lif", "leak_shift"), "int")
+    n_in = _meta(art, ("model", "n_in"), "int")
+    n_out = _meta(art, ("model", "n_out"), "int")
+    n_groups = _meta(art, ("readout", "n_groups"), "int")
+    per_group = _meta(art, ("readout", "per_group"), "int")
+    fallback = _meta(art, ("readout", "fallback"), "str")
+    scale = _meta(art, ("quant", "scale"), "float")
+    lane = _meta(art, ("codesign", "lane"), "int")
+    if fallback not in ("membrane", "zero"):
+        raise LoweringError(f"readout.fallback={fallback!r} is not a known "
+                            f"no-spike policy ('membrane' | 'zero')")
+    if n_groups * per_group != n_out:
+        raise LoweringError(
+            f"readout geometry n_groups*per_group = {n_groups}*{per_group} "
+            f"!= model.n_out = {n_out}")
+    n_pad = int(art["thr_padded"].shape[0])
+    if art["w_padded"].shape != (n_in, n_pad):
+        raise LoweringError(
+            f"w_padded shape {art['w_padded'].shape} != "
+            f"(n_in={n_in}, n_pad={n_pad})")
+    if art["w_int8"].shape != (n_in, n_out):
+        raise LoweringError(
+            f"w_int8 shape {art['w_int8'].shape} != "
+            f"(n_in={n_in}, n_out={n_out})")
+    if n_pad < n_out:
+        raise LoweringError(f"padded width {n_pad} < n_out {n_out}")
+    scalars = {"T": T, "x_min": x_min, "e_max": e_max,
+               "leak_shift": leak_shift, "n_in": n_in, "n_out": n_out,
+               "n_groups": n_groups, "per_group": per_group,
+               "fallback": fallback, "scale": scale, "n_pad": n_pad,
+               "lane": lane}
+    return LoweredProgram(
+        fingerprint=_program_fingerprint(art.fingerprint(), scalars),
+        artifact=art,
+        T=T, x_min=x_min, e_max=e_max, leak_shift=leak_shift,
+        n_in=n_in, n_out=n_out, n_groups=n_groups, per_group=per_group,
+        fallback=fallback, scale=scale, n_pad=n_pad, lane=lane,
+        w_float=jnp.asarray(art["w_float"]),
+        w_int8=jnp.asarray(art["w_int8"]),
+        thresholds=jnp.asarray(art["thresholds"]),
+        w_padded=jnp.asarray(art["w_padded"]),
+        thr_padded=jnp.asarray(art["thr_padded"]),
+        encode=EncodePlan(T=T, x_min=x_min, e_max=e_max, n_in=n_in),
+        decode=DecodePlan(n_groups=n_groups, per_group=per_group,
+                          sentinel=T, fallback=fallback),
+        cost=PYNQ_COST)
+
+
+class ProgramCache:
+    """Process-wide content-addressed caches for lowered programs and their
+    compiled-callable bundles. Keys are content fingerprints plus the exact
+    runtime config, never python object identity — a corrupted clone or a
+    re-exported artifact gets its own entry, a watchdog-spawned replacement
+    lane over the same artifact gets a hit."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._programs: dict[str, LoweredProgram] = {}
+        self._bundles: dict[tuple, Any] = {}
+        self.program_hits = 0
+        self.program_misses = 0
+        self.bundle_hits = 0
+        self.bundle_misses = 0
+
+    def program(self, art: Artifact) -> tuple[LoweredProgram, bool]:
+        key = art.fingerprint()
+        with self._lock:
+            prog = self._programs.get(key)
+            if prog is not None:
+                self.program_hits += 1
+                return prog, True
+        prog = _lower_uncached(art)
+        with self._lock:
+            # first lowering wins (two racing lowers of the same artifact
+            # produce equal programs anyway — determinism is the oracle)
+            cached = self._programs.setdefault(key, prog)
+            self.program_misses += 1
+        return cached, False
+
+    def bundle(self, key: tuple, build: Callable[[], Any]) -> tuple[Any, bool]:
+        with self._lock:
+            if key in self._bundles:
+                self.bundle_hits += 1
+                return self._bundles[key], True
+        built = build()
+        with self._lock:
+            cached = self._bundles.setdefault(key, built)
+            self.bundle_misses += 1
+        return cached, False
+
+    def clear(self) -> None:
+        with self._lock:
+            self._programs.clear()
+            self._bundles.clear()
+            self.program_hits = self.program_misses = 0
+            self.bundle_hits = self.bundle_misses = 0
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"programs": len(self._programs),
+                    "bundles": len(self._bundles),
+                    "program_hits": self.program_hits,
+                    "program_misses": self.program_misses,
+                    "bundle_hits": self.bundle_hits,
+                    "bundle_misses": self.bundle_misses}
+
+
+#: the process-wide cache every ``make_runtime`` / serving lane shares
+PROGRAM_CACHE = ProgramCache()
+
+
+def lower(artifact: Artifact | LoweredProgram, *,
+          cache: bool = True) -> LoweredProgram:
+    """Lower an artifact to its frozen execution program.
+
+    Idempotent: passing an already-lowered program returns it unchanged.
+    ``cache=False`` forces a fresh lowering (the determinism oracle compares
+    two independent lowers; export-time validation avoids caching a program
+    whose artifact ``save()`` is about to re-stamp)."""
+    if isinstance(artifact, LoweredProgram):
+        return artifact
+    if not isinstance(artifact, Artifact):
+        raise TypeError(f"cannot lower {type(artifact).__name__} "
+                        f"(expected Artifact or LoweredProgram)")
+    if cache:
+        prog, _ = PROGRAM_CACHE.program(artifact)
+        return prog
+    return _lower_uncached(artifact)
+
+
+def lower_with_faults(artifact: Artifact | LoweredProgram,
+                      plan) -> LoweredProgram:
+    """The static-fault lowering pass: corrupt an in-memory CLONE of the
+    artifact per the plan's seeded SEU fields, then lower the clone. The
+    pristine artifact (and its cached program) are untouched; the corrupted
+    program gets its own content fingerprint, so cache entries never alias."""
+    from repro.faults.models import corrupt_artifact
+    art = artifact.artifact if isinstance(artifact, LoweredProgram) \
+        else artifact
+    return lower(corrupt_artifact(art, plan))

@@ -8,91 +8,96 @@ runtime must match it bit-exactly on first-spike times and decoded labels
 Also hosts the dense GPU/CPU-baseline analogues (Table 3 rows 2-5): dense
 grouped-neuron execution of the SAME exported parameters in FP32 and INT8,
 executed as plain matmuls rather than event-level TTFS runtimes.
+
+Execution parameters come from the lowered program (``core.lowering``), not
+ad-hoc artifact meta reads, and the jitted callables live in the
+process-wide program cache — two ``SNNReference`` instances over the same
+artifact share one compiled forward.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import ttfs
 from repro.core.artifact import Artifact
 from repro.core.lif_dynamics import lif_scan
+from repro.core.lowering import PROGRAM_CACHE, LoweredProgram, lower
+from repro.core.types import SNNOutput, decode_output  # noqa: F401 — SNNOutput
+#                               re-exported: runtimes/tests import it from here
 
 
-class SNNOutput(NamedTuple):
-    labels: jnp.ndarray        # (B,) int32
-    first_spike: jnp.ndarray   # (B, N_out) int32 (logical neurons)
-    v_final: jnp.ndarray       # (B, N_out) int32
-    steps: jnp.ndarray         # (B,) int32 — timesteps consumed (T for full scan)
+def _build_bundle(prog: LoweredProgram) -> dict:
+    """Jitted callables closed over the program's fields (module-level
+    closures, never bound methods — jax caches executables on the function
+    object, so the bundle IS the compilation cache entry)."""
+    T, x_min, leak_shift = prog.T, prog.x_min, prog.leak_shift
+    w_int8, thr, w_f32 = prog.w_int8, prog.thresholds, prog.w_float
+    plan = prog.decode
+    g, p = prog.n_groups, prog.per_group
 
+    def forward(images: jnp.ndarray) -> SNNOutput:
+        times = ttfs.encode_ttfs(images, T, x_min)              # (B, N_in)
+        raster = ttfs.frames_from_times(times, T)               # (B, T, N_in)
+        # integer synaptic currents per step: (B, T, N_out) int32
+        currents = jax.lax.dot_general(
+            raster, w_int8,
+            (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        currents = jnp.moveaxis(currents, 1, 0)                 # (T, B, N_out)
+        res = lif_scan(currents, thr[None, :], leak_shift, T)
+        labels = decode_output(res.first_spike, res.v_final, plan)
+        steps = jnp.full(labels.shape, T, jnp.int32)
+        return SNNOutput(labels, res.first_spike, res.v_final, steps)
 
-def _decode(art: Artifact, first, v_final):
-    return ttfs.decode_labels(
-        first, v_final,
-        n_groups=art.m("readout", "n_groups"),
-        per_group=art.m("readout", "per_group"),
-        sentinel=art.m("encode", "T"),
-        fallback=art.m("readout", "fallback"))
+    def dense_logits_fp32(images):
+        """Dense grouped-neuron execution, FP32 (the 'GPU FP32'/'CPU FP32' row)."""
+        z = jnp.asarray(images, jnp.float32) @ w_f32            # (B, N_out)
+        return jnp.mean(z.reshape(-1, g, p), axis=-1)           # grouped readout
+
+    def dense_logits_int8(images):
+        """Dense INT8 execution of the same exported parameters."""
+        x_q = jnp.clip(jnp.round(jnp.asarray(images, jnp.float32) * 127.0),
+                       0, 127).astype(jnp.int8)
+        z = jax.lax.dot_general(x_q, w_int8, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+        return jnp.mean(z.reshape(-1, g, p).astype(jnp.float32), axis=-1)
+
+    return {"forward": jax.jit(forward),
+            "dense_fp32": jax.jit(dense_logits_fp32),
+            "dense_int8": jax.jit(dense_logits_int8)}
 
 
 class SNNReference:
     """Reference runtime. ``forward(images)`` mirrors torch's ``model(x)``."""
 
-    def __init__(self, artifact: Artifact):
-        self.art = artifact
-        self.T = int(artifact.m("encode", "T"))
-        self.x_min = float(artifact.m("encode", "x_min"))
-        self.leak_shift = int(artifact.m("lif", "leak_shift"))
-        self.w_int8 = jnp.asarray(artifact["w_int8"])          # (N_in, N_out)
-        self.thr = jnp.asarray(artifact["thresholds"])         # (N_out,) int32
-        self.w_f32 = jnp.asarray(artifact["w_float"])
-        self.scale = float(artifact.m("quant", "scale"))
-        self._fwd = jax.jit(self._forward_impl)
+    def __init__(self, artifact: Artifact | LoweredProgram):
+        prog = lower(artifact)
+        self.program = prog
+        self.art = prog.artifact
+        self.T = prog.T
+        self.x_min = prog.x_min
+        self.leak_shift = prog.leak_shift
+        self.w_int8 = prog.w_int8              # (N_in, N_out)
+        self.thr = prog.thresholds             # (N_out,) int32
+        self.w_f32 = prog.w_float
+        self.scale = prog.scale
+        bundle, self.cache_hit = PROGRAM_CACHE.bundle(
+            ("reference", prog.fingerprint), lambda: _build_bundle(prog))
+        self._fwd = bundle["forward"]
+        # dense baselines (Table 3) — shared jitted callables, one compile
+        # per program per process
+        self.dense_logits_fp32 = bundle["dense_fp32"]
+        self.dense_logits_int8 = bundle["dense_int8"]
 
     # ---------------------------------------------------------------- TTFS
-    def _forward_impl(self, images: jnp.ndarray) -> SNNOutput:
-        T = self.T
-        times = ttfs.encode_ttfs(images, T, self.x_min)         # (B, N_in)
-        raster = ttfs.frames_from_times(times, T)               # (B, T, N_in) int8
-        # integer synaptic currents per step: (B, T, N_out) int32
-        currents = jax.lax.dot_general(
-            raster, self.w_int8,
-            (((2,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        currents = jnp.moveaxis(currents, 1, 0)                 # (T, B, N_out)
-        res = lif_scan(currents, self.thr[None, :], self.leak_shift, T)
-        labels = _decode(self.art, res.first_spike, res.v_final)
-        steps = jnp.full(labels.shape, T, jnp.int32)
-        return SNNOutput(labels, res.first_spike, res.v_final, steps)
-
     def forward(self, images) -> SNNOutput:
         return self._fwd(jnp.asarray(images, jnp.float32))
 
     __call__ = forward
 
     # ---------------------------------------------- dense baselines (Table 3)
-    @functools.partial(jax.jit, static_argnums=0)
-    def dense_logits_fp32(self, images):
-        """Dense grouped-neuron execution, FP32 (the 'GPU FP32'/'CPU FP32' row)."""
-        z = jnp.asarray(images, jnp.float32) @ self.w_f32       # (B, N_out)
-        g = self.art.m("readout", "n_groups"); p = self.art.m("readout", "per_group")
-        return jnp.mean(z.reshape(-1, g, p), axis=-1)           # grouped readout
-
-    @functools.partial(jax.jit, static_argnums=0)
-    def dense_logits_int8(self, images):
-        """Dense INT8 execution of the same exported parameters."""
-        x_q = jnp.clip(jnp.round(jnp.asarray(images, jnp.float32) * 127.0),
-                       0, 127).astype(jnp.int8)
-        z = jax.lax.dot_general(x_q, self.w_int8, (((1,), (0,)), ((), ())),
-                                preferred_element_type=jnp.int32)
-        g = self.art.m("readout", "n_groups"); p = self.art.m("readout", "per_group")
-        return jnp.mean(z.reshape(-1, g, p).astype(jnp.float32), axis=-1)
-
     def dense_labels(self, images, mode: str = "fp32"):
         logits = (self.dense_logits_fp32 if mode == "fp32"
                   else self.dense_logits_int8)(images)

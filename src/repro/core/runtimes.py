@@ -33,6 +33,7 @@ from __future__ import annotations
 from typing import Callable
 
 from repro.core.artifact import Artifact
+from repro.core.lowering import PROGRAM_CACHE, LoweredProgram, lower
 from repro.telemetry import trace as ttrace
 
 _REGISTRY: dict[str, Callable] = {}
@@ -61,33 +62,43 @@ def available() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def make_runtime(artifact: Artifact, spec: str, *, faults=None, **kw):
-    """Build the runtime named by ``spec`` over ``artifact``.
+def make_runtime(artifact: Artifact | LoweredProgram, spec: str, *,
+                 faults=None, **kw):
+    """Build the runtime named by ``spec`` over ``artifact`` (a raw
+    ``Artifact`` or an already-lowered ``LoweredProgram`` — rebuilding lanes
+    pass the program so the lowering stage runs once per artifact).
 
     ``faults`` accepts anything ``repro.faults.FaultPlan.coerce`` does
     (None | plan | spec string like ``"seu_weight=4,seed=7"`` | kwargs dict):
 
-      * a STATIC plan (artifact-resident SEU bit flips) corrupts an in-memory
-        CLONE of the artifact for any runtime family — the caller's artifact
-        stays pristine (it backs the scrub/reload recovery path) and the
-        clone's unchanged SHA-256 manifest is the detector;
+      * a STATIC plan (artifact-resident SEU bit flips) is a lowering pass
+        (``lowering.lower_with_faults``): it corrupts an in-memory CLONE of
+        the artifact for any runtime family — the caller's artifact stays
+        pristine (it backs the scrub/reload recovery path) and the clone's
+        unchanged SHA-256 manifest is the detector;
       * a DYNAMIC plan (board-datapath faults: membrane SEU, stuck groups,
         AER glitches, forced FIFO depth) is only emulated by the per-image
         ``board-py`` scheduler; every other spec rejects it loudly rather
         than silently serving the clean datapath;
       * lane-fault fields are the serving scheduler's concern and are
         ignored here.
+
+    When a ``Tracer`` is installed, the ``runtime.build`` span's META gains
+    ``cache_hit`` — True when the runtime's compiled-callable bundle (or,
+    for uncompiled runtimes, its lowered program) came out of the
+    process-wide ``ProgramCache``. Meta, not attrs: cache occupancy is
+    host-nondeterministic and must not enter the canonical span tree.
     """
     family, _, opts = spec.partition("-")
     if family not in _REGISTRY:
         raise ValueError(f"unknown runtime family {family!r} in spec "
                          f"{spec!r}; available: {available()}")
     if faults is not None:
-        from repro.faults.models import corrupt_artifact
+        from repro.core.lowering import lower_with_faults
         from repro.faults.plan import DYNAMIC_FIELDS, FaultPlan
         plan = FaultPlan.coerce(faults)
         if plan.has_static:
-            artifact = corrupt_artifact(artifact, plan)
+            artifact = lower_with_faults(artifact, plan)
         if plan.has_dynamic:
             if family != "board" or opts.partition("-")[0] != "py":
                 raise ValueError(
@@ -95,12 +106,20 @@ def make_runtime(artifact: Artifact, spec: str, *, faults=None, **kw):
                     f"emulated by the 'board-py' runtime; spec {spec!r} "
                     f"cannot inject {plan.describe()}")
             kw["faults"] = plan
+    if isinstance(artifact, LoweredProgram):
+        program, program_hit = artifact, True
+    else:
+        program, program_hit = PROGRAM_CACHE.program(artifact)
     rec = ttrace.get()
     if not rec.enabled:
-        return _REGISTRY[family](artifact, opts, **kw)
+        return _REGISTRY[family](program, opts, **kw)
     with rec.span("runtime.build", "system", attrs={"family": family},
-                  meta={"spec": spec}):
-        return _REGISTRY[family](artifact, opts, **kw)
+                  meta={"spec": spec}) as sp:
+        rt = _REGISTRY[family](program, opts, **kw)
+        if sp is not None:
+            sp.meta["cache_hit"] = bool(getattr(rt, "cache_hit",
+                                                program_hit))
+        return rt
 
 
 #: near-miss grammar probe set: every way the spec grammar can be (mis)spelled

@@ -1,0 +1,54 @@
+"""Neutral output/plan types shared by every runtime family.
+
+This module is the dependency floor of the runtime stack: it may import
+``core.ttfs`` (pure functions) and nothing else from the runtime families,
+so reference / accelerator / board / serving can all consume the same
+``SNNOutput`` contract and the same public ``decode_output`` without the
+cross-module private imports that used to tie the accelerator to
+``reference._decode``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import ttfs
+
+
+class SNNOutput(NamedTuple):
+    labels: jnp.ndarray        # (B,) int32
+    first_spike: jnp.ndarray   # (B, N_out) int32 (logical neurons)
+    v_final: jnp.ndarray       # (B, N_out) int32
+    steps: jnp.ndarray         # (B,) int32 — timesteps consumed (T for full scan)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodePlan:
+    """The lowered TTFS encode stage: everything the host packer needs."""
+
+    T: int          # time window; also the never-spiked sentinel
+    x_min: float    # encoder intensity threshold
+    e_max: int      # calibrated event-buffer depth (FIFO depth analogue)
+    n_in: int       # input neurons (admission-time shape contract)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """The lowered grouped-TTFS readout stage (paper §2.3)."""
+
+    n_groups: int   # class groups
+    per_group: int  # neurons per group (n_groups * per_group == n_out)
+    sentinel: int   # first-spike sentinel (== T)
+    fallback: str   # "membrane" | "zero" no-spike policy
+
+
+def decode_output(first_spike: jnp.ndarray, v_final: jnp.ndarray,
+                  plan: DecodePlan) -> jnp.ndarray:
+    """Public grouped readout: (…, n_out) first-spike/membrane -> labels."""
+    return ttfs.decode_labels(
+        first_spike, v_final,
+        n_groups=plan.n_groups, per_group=plan.per_group,
+        sentinel=plan.sentinel, fallback=plan.fallback)

@@ -62,11 +62,11 @@ def integrity_errors(art: Artifact | None) -> list[str]:
     fingerprint ``Artifact.verify``."""
     if art is None or not art.meta.get("manifest"):
         return []
-    from repro.core.artifact import _array_hash
+    from repro.core.artifact import array_hash
     manifest = art.meta["manifest"]
     bad = [name for name, digest in manifest.items()
            if name in art.arrays
-           and _array_hash(art.arrays[name]) != digest]
+           and array_hash(art.arrays[name]) != digest]
     missing = sorted(set(manifest) - set(art.arrays))
     errs = []
     if bad:
@@ -109,20 +109,20 @@ class Canary:
                 f"pinned reference label {int(self.want[i])}" for i in bad]
 
     @classmethod
-    def from_artifact(cls, art: Artifact,
-                      pool: np.ndarray | None = None) -> "Canary":
-        """Build the probe set: candidate images are the ``pool`` (held-out
-        real samples — preferred) plus one crafted probe per readout group
-        (the group's positive float-weight mass, the input that drives it
-        hardest). Reference labels are evaluated once on ``SNNReference``;
-        one probe is kept per distinct label. A saturated stuck-at group is
-        guaranteed to move at least one probe's label whenever the set spans
-        two or more labels."""
+    def from_program(cls, program,
+                     pool: np.ndarray | None = None) -> "Canary":
+        """Build the probe set from a lowered program: candidate images are
+        the ``pool`` (held-out real samples — preferred) plus one crafted
+        probe per readout group (the group's positive float-weight mass, the
+        input that drives it hardest). Reference labels are evaluated once on
+        ``SNNReference``; one probe is kept per distinct label. A saturated
+        stuck-at group is guaranteed to move at least one probe's label
+        whenever the set spans two or more labels."""
         from repro.core.reference import SNNReference
-        n_groups = int(art.m("readout", "n_groups"))
-        per_group = int(art.m("readout", "per_group"))
-        x_min = float(art.m("encode", "x_min"))
-        w = np.asarray(art["w_float"], np.float64)
+        n_groups = program.n_groups
+        per_group = program.per_group
+        x_min = program.x_min
+        w = np.asarray(program.artifact["w_float"], np.float64)
         crafted = []
         for g in range(n_groups):
             drive = np.clip(w[:, g * per_group:(g + 1) * per_group],
@@ -135,7 +135,7 @@ class Canary:
         if pool is not None:
             cands = np.concatenate([np.asarray(pool, np.float32)[:256],
                                     cands])
-        ref = SNNReference(art)
+        ref = SNNReference(program)
         want = np.asarray(ref.forward(cands).labels, np.int32)
         keep: dict[int, int] = {}
         for i, lab in enumerate(want):
@@ -143,6 +143,12 @@ class Canary:
         idx = sorted(keep.values())
         return cls(images=cands[idx], want=want[idx],
                    covered_groups=tuple(sorted(keep)), n_groups=n_groups)
+
+    @classmethod
+    def from_artifact(cls, art: Artifact,
+                      pool: np.ndarray | None = None) -> "Canary":
+        from repro.core.lowering import lower
+        return cls.from_program(lower(art), pool=pool)
 
 
 # ---------------------------------------------------------------------- trace
@@ -164,12 +170,12 @@ def trace_errors(runtime, images: np.ndarray) -> list[str]:
 
     from repro.board.energy import account
     from repro.core import ttfs
-    from repro.core.events import _step_counts
+    from repro.core.events import step_counts
 
     T = int(runtime.T)
     times = np.asarray(ttfs.encode_ttfs(
         jnp.asarray(np.atleast_2d(images), jnp.float32), T, runtime.x_min))
-    expect = _step_counts(times, T)[:, :T].astype(np.int64)
+    expect = step_counts(times, T)[:, :T].astype(np.int64)
     errs: list[str] = []
     actual = np.asarray(actual, np.int64)
     if actual.shape != expect.shape:

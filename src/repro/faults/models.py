@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.board.event_queue import AEREventQueue
 from repro.board.neuron_core import GroupedNeuronCore
-from repro.core.artifact import Artifact, _array_hash
+from repro.core.artifact import Artifact, array_hash
 from repro.core.quant import INT32_NEVER_FIRE
 from repro.faults.plan import MEMBRANE_BITS, FaultPlan
 
@@ -81,7 +81,7 @@ def corrupt_artifact(art: Artifact, plan: FaultPlan) -> Artifact:
         # an in-memory artifact that was never exported: stamp the manifest
         # and fingerprint from the PRISTINE arrays first (exactly what
         # ``Artifact.save`` would have recorded), so the SEU is detectable
-        meta["manifest"] = {k: _array_hash(v) for k, v in art.arrays.items()}
+        meta["manifest"] = {k: array_hash(v) for k, v in art.arrays.items()}
         meta["fingerprint"] = Artifact(meta, art.arrays).fingerprint()
     arrays = dict(art.arrays)
     for names, n, stream in ((WEIGHT_ARRAYS, plan.seu_weight_flips, "seu-w"),

@@ -104,13 +104,13 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         cfg = dataclasses.replace(cfg, **var["cfg"])
     cell = shp.SHAPES[shape_name]
     if var.get("mesh_shape"):
-        from repro.launch.mesh import _mk
+        from repro.launch.mesh import build_mesh
         shape = var["mesh_shape"]
         if multi_pod:
             shape = (2,) + shape
-            mesh = _mk(shape, ("pod", "data", "model"))
+            mesh = build_mesh(shape, ("pod", "data", "model"))
         else:
-            mesh = _mk(shape, ("data", "model"))
+            mesh = build_mesh(shape, ("data", "model"))
     else:
         mesh = make_production_mesh(multi_pod=multi_pod)
     constrain = SH.make_constrainer(mesh)

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 
 
-def _mk(shape, axes):
+def build_mesh(shape, axes):
     try:
         from jax.sharding import AxisType
     except ImportError:
@@ -31,9 +31,9 @@ def _mk(shape, axes):
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mk(shape, axes)
+    return build_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for unit tests (requires >= prod(shape) host devices)."""
-    return _mk(shape, axes)
+    return build_mesh(shape, axes)

@@ -68,6 +68,7 @@ import jax
 import numpy as np
 
 from repro.core.artifact import Artifact
+from repro.core.lowering import LoweredProgram, lower
 from repro.core.runtimes import make_runtime
 from repro.faults.detect import (Canary, ecc_errors, runtime_integrity_errors,
                                  trace_errors)
@@ -145,23 +146,28 @@ class _Lane:
 
     def __init__(self, lane_id: int, artifact: Artifact, spec: str,
                  kernel: str | None, latency_mode: bool,
-                 plan: FaultPlan | None = None):
+                 plan: FaultPlan | None = None,
+                 program: LoweredProgram | None = None):
         self.lane_id = lane_id
-        self.art = artifact
+        self.art = artifact              # pristine — backs scrub/reload
         self.spec = spec
         self.family, _, _ = spec.partition("-")
         self.latency_mode = bool(latency_mode)
         self.plan = plan
+        # one lowering per artifact: the scheduler lowers once and every lane
+        # (including watchdog-spawned replacements) reuses that program — the
+        # serve-path scalars below come from it, not from repeated meta reads
+        self.program = program if program is not None else lower(artifact)
         kw = {"latency_mode": latency_mode}
         if kernel is not None:
             kw["kernel"] = kernel        # None = the family's own default
         if plan is not None:
             kw["faults"] = plan          # static/dynamic injection sites
-        self.runtime = make_runtime(artifact, spec, **kw)
+        self.runtime = make_runtime(self.program, spec, **kw)
         self._dense = None               # built lazily on first overflow
-        self.T = int(artifact.m("encode", "T"))
-        self.x_min = float(artifact.m("encode", "x_min"))
-        self.e_max = int(artifact.m("events", "e_max"))
+        self.T = self.program.T
+        self.x_min = self.program.x_min
+        self.e_max = self.program.e_max
         self.injector = None             # host-side fault site (lane faults)
         if plan is not None and plan.has_lane_faults:
             from repro.faults.models import LaneFaultInjector
@@ -250,9 +256,11 @@ class _Lane:
     # ----------------------------------------------------- degraded fallback
     def _ensure_dense(self) -> None:
         if self._dense is None:
-            # built from the lane's PRISTINE artifact — a degraded lane must
-            # not inherit the faulted datapath it is escaping
-            self._dense = make_runtime(self.art, "accelerator-batch")
+            # built from the lane's PRISTINE lowered program — a degraded
+            # lane must not inherit the faulted datapath it is escaping
+            # (static faults corrupt a clone inside make_runtime, never
+            # the shared program)
+            self._dense = make_runtime(self.program, "accelerator-batch")
 
     def _serve_dense(self, images: np.ndarray, k: int) -> dict:
         """Circuit-broken path: the whole batch through the dense
@@ -304,7 +312,10 @@ class ServingScheduler:
         self.max_wait_us = float(max_wait_us)
         self.workers = int(workers)
         self.latency_mode = bool(latency_mode)
-        self.n_in = int(artifact.m("model", "n_in"))
+        # lower once; every lane (and watchdog replacement) shares this
+        # program, so rebuilds skip straight to the cached compiled bundle
+        self.program = lower(artifact)
+        self.n_in = self.program.n_in
         self.plan = FaultPlan.coerce(faults)
         self.resilience = ResilienceConfig.coerce(resilience)
 
@@ -328,7 +339,7 @@ class ServingScheduler:
 
         self.canary: Canary | None = None
         if canary_pool is not None or self.resilience.canary_every:
-            self.canary = Canary.from_artifact(artifact, pool=canary_pool)
+            self.canary = Canary.from_program(self.program, pool=canary_pool)
         self.lanes = [self._commission(i) for i in range(max(1, workers))]
         if all(lane.retired for lane in self.lanes):
             # persistent faults + degrade=False can retire every lane at
@@ -773,7 +784,7 @@ class ServingScheduler:
         is quarantined — degraded to the dense path when allowed."""
         plan = self.plan.for_lane(lane_id) if self.plan is not None else None
         lane = _Lane(lane_id, self.art, self.spec, self.kernel,
-                     self.latency_mode, plan)
+                     self.latency_mode, plan, program=self.program)
         errs = self._warm_errors(lane)
         if not errs and self.resilience.startup_checks:
             errs = self._startup_errors(lane)
@@ -783,7 +794,8 @@ class ServingScheduler:
         self.metrics.inc("lane_faults")
         fresh = _Lane(lane_id, self.art, self.spec, self.kernel,
                       self.latency_mode,
-                      plan.after_scrub() if plan is not None else None)
+                      plan.after_scrub() if plan is not None else None,
+                      program=self.program)
         fresh.fault_count = 1
         fresh.restarts = 1
         errs = self._warm_errors(fresh)
@@ -861,7 +873,7 @@ class ServingScheduler:
             fresh = _Lane(lane.lane_id, self.art, self.spec, self.kernel,
                           self.latency_mode,
                           lane.plan.after_scrub() if lane.plan is not None
-                          else None)
+                          else None, program=self.program)
             errs = self._warm_errors(fresh)
             if not errs and res.startup_checks:
                 errs = self._startup_errors(fresh)
@@ -970,7 +982,7 @@ class ServingScheduler:
             fresh = _Lane(lane.lane_id, self.art, self.spec, self.kernel,
                           self.latency_mode,
                           lane.plan.after_scrub() if lane.plan is not None
-                          else None)
+                          else None, program=self.program)
             errs = self._warm_errors(fresh)
             if not errs and self.resilience.startup_checks:
                 errs = self._startup_errors(fresh)

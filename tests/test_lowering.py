@@ -1,0 +1,241 @@
+"""The single lowering stage: Artifact → LoweredProgram.
+
+Covers the tentpole contracts the refactor introduced:
+
+  * lowering is deterministic (two cache-bypassing lowers agree bit for bit)
+    and the process cache returns one shared program object;
+  * export → save → load → lower round-trips every execution scalar;
+  * meta coercion is strict but not brittle (float-integral and digit-string
+    values lower; junk, booleans and non-integral floats fail loudly with
+    the offending meta path named);
+  * the static-fault lowering pass corrupts a CLONE — the pristine artifact's
+    bytes and cached program are untouched, the corrupted program gets its
+    own fingerprint, and the checksum detector fires on the clone;
+  * the compiled-bundle cache is shared across runtime instances (including
+    via ``make_runtime``) and ``runtime.build`` spans record the hit;
+  * source hygiene gates: no ``_``-private name is imported across modules
+    inside ``src/repro``, and no runtime module reads ``artifact.m(...)``
+    for execution parameters.
+"""
+
+import ast
+import copy
+import os
+import re
+
+import numpy as np
+import pytest
+
+from repro.core.artifact import Artifact
+from repro.core.lowering import (LoweredProgram, LoweringError, PROGRAM_CACHE,
+                                 lower, lower_with_faults)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+
+def _clone(art: Artifact) -> Artifact:
+    return Artifact(copy.deepcopy(art.meta), dict(art.arrays))
+
+
+# ------------------------------------------------------------ determinism
+def test_lowering_deterministic_and_cached(trained_artifact):
+    art, _, _ = trained_artifact
+    a = lower(art, cache=False)
+    b = lower(art, cache=False)
+    assert a.fingerprint == b.fingerprint
+    for f in ("T", "x_min", "e_max", "leak_shift", "n_in", "n_out",
+              "n_groups", "per_group", "fallback", "scale", "n_pad", "lane"):
+        assert getattr(a, f) == getattr(b, f), f
+    cached1 = lower(art)
+    cached2 = lower(art)
+    assert cached1 is cached2          # one shared program object
+    assert cached1.fingerprint == a.fingerprint
+    # idempotent: lowering a program is the identity
+    assert lower(cached1) is cached1
+
+
+def test_lower_rejects_non_artifact():
+    with pytest.raises(TypeError):
+        lower({"not": "an artifact"})
+
+
+# ------------------------------------------------------- export round-trip
+def test_export_lower_roundtrip(trained_artifact):
+    art, path, _ = trained_artifact
+    reloaded = Artifact.load(path)
+    prog = lower(reloaded, cache=False)
+    assert isinstance(prog, LoweredProgram)
+    assert prog.T == int(art.m("encode", "T"))
+    assert prog.x_min == float(art.m("encode", "x_min"))
+    assert prog.e_max == int(art.m("events", "e_max"))
+    assert prog.leak_shift == int(art.m("lif", "leak_shift"))
+    assert prog.n_groups * prog.per_group == prog.n_out
+    assert prog.n_pad == art["thr_padded"].shape[0]
+    assert prog.n_pad % prog.lane == 0
+    assert prog.decode.sentinel == prog.T
+    assert prog.encode.n_in == prog.n_in
+    # device arrays mirror the host arrays bit for bit
+    np.testing.assert_array_equal(np.asarray(prog.w_padded),
+                                  reloaded["w_padded"])
+    np.testing.assert_array_equal(np.asarray(prog.thr_padded),
+                                  reloaded["thr_padded"])
+
+
+# ----------------------------------------------------------- meta coercion
+def test_meta_coercion_accepts_integral_forms(trained_artifact):
+    art, _, _ = trained_artifact
+    T = int(art.m("encode", "T"))
+    for benign in (float(T), str(T)):
+        c = _clone(art)
+        c.meta["encode"]["T"] = benign
+        prog = lower(c, cache=False)
+        assert prog.T == T and type(prog.T) is int
+
+
+@pytest.mark.parametrize("junk", ["abc", 64.5, True, None, [64]])
+def test_meta_coercion_rejects_junk_T(trained_artifact, junk):
+    art, _, _ = trained_artifact
+    c = _clone(art)
+    c.meta["encode"]["T"] = junk
+    with pytest.raises(LoweringError, match=r"encode\.T"):
+        lower(c, cache=False)
+
+
+def test_meta_missing_path_is_named(trained_artifact):
+    art, _, _ = trained_artifact
+    c = _clone(art)
+    del c.meta["events"]["e_max"]
+    with pytest.raises(LoweringError, match=r"events\.e_max"):
+        lower(c, cache=False)
+
+
+def test_bad_readout_geometry_rejected(trained_artifact):
+    art, _, _ = trained_artifact
+    c = _clone(art)
+    c.meta["readout"]["n_groups"] = int(c.meta["readout"]["n_groups"]) + 1
+    with pytest.raises(LoweringError, match="geometry"):
+        lower(c, cache=False)
+
+
+def test_missing_array_rejected(trained_artifact):
+    art, _, _ = trained_artifact
+    c = Artifact(copy.deepcopy(art.meta),
+                 {k: v for k, v in art.arrays.items() if k != "w_padded"})
+    with pytest.raises(LoweringError, match="w_padded"):
+        lower(c, cache=False)
+
+
+# ---------------------------------------------------- fault lowering pass
+def test_fault_pass_corrupts_a_clone_only(trained_artifact):
+    from repro.faults.detect import integrity_errors
+    from repro.faults.plan import FaultPlan
+    art, _, _ = trained_artifact
+    pristine_bytes = {k: v.tobytes() for k, v in art.arrays.items()}
+    clean = lower(art)
+    plan = FaultPlan(seed=11, seu_weight_flips=6, seu_threshold_flips=2)
+    bad = lower_with_faults(art, plan)
+    # pristine arrays are bit-identical — corruption went into the clone
+    for k, v in art.arrays.items():
+        assert v.tobytes() == pristine_bytes[k], k
+    assert bad.artifact is not art
+    assert bad.fingerprint != clean.fingerprint
+    # the cached pristine program is still the clean one
+    assert lower(art) is clean
+    # the checksum detector fires on the clone, stays quiet on the original
+    assert integrity_errors(bad.artifact)
+    # deterministic: same plan, same artifact → same corrupted program
+    assert lower_with_faults(art, plan).fingerprint == bad.fingerprint
+    # a program input is unwrapped to its pristine backing artifact
+    assert lower_with_faults(clean, plan).fingerprint == bad.fingerprint
+
+
+# ------------------------------------------------------------ bundle cache
+def test_bundle_shared_across_runtime_instances(trained_artifact):
+    from repro.core.runtimes import make_runtime
+    art, _, _ = trained_artifact
+    a = make_runtime(art, "accelerator-event")
+    b = make_runtime(art, "accelerator-event")
+    # same jitted function object → jax reuses the compiled executable
+    assert a._fwd_event is b._fwd_event
+    assert b.cache_hit is True
+    # a different config compiles its own bundle
+    c = make_runtime(art, "accelerator-batch")
+    assert getattr(c, "_fwd_batch", None) is not a._fwd_event
+
+
+def test_runtime_build_span_meta_records_cache_hit(trained_artifact):
+    from repro.core.runtimes import make_runtime
+    from repro.telemetry.trace import Tracer, install
+    art, _, _ = trained_artifact
+    make_runtime(art, "board-batched")      # warm the bundle
+    tr = Tracer()
+    install(tr)
+    try:
+        make_runtime(art, "board-batched")
+    finally:
+        install(None)
+    builds = [s for s in tr.spans if s.name == "runtime.build"]
+    assert builds and builds[-1].meta.get("cache_hit") is True
+    # cache_hit lives in META only — never in the canonical span form
+    assert "cache_hit" not in builds[-1].canonical().get("attrs", {})
+
+
+def test_distinct_artifacts_get_distinct_programs(trained_artifact):
+    art, _, _ = trained_artifact
+    c = _clone(art)
+    c.meta["events"]["e_max"] = int(c.meta["events"]["e_max"]) + 1
+    pa, pc = lower(art), lower(c)
+    assert pa is not pc
+    assert pa.fingerprint != pc.fingerprint
+    assert pc.e_max == pa.e_max + 1
+
+
+# -------------------------------------------------------- hygiene: imports
+def _py_files():
+    for root, _, files in os.walk(SRC):
+        for f in files:
+            if f.endswith(".py"):
+                yield os.path.join(root, f)
+
+
+def test_no_private_cross_module_imports():
+    """No module inside src/repro imports a ``_``-prefixed (private) name
+    from another repro module — shared names must be public API."""
+    bad = []
+    for path in _py_files():
+        with open(path) as f:
+            tree = ast.parse(f.read(), filename=path)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ImportFrom) or node.module is None:
+                continue
+            if not node.module.startswith("repro"):
+                continue
+            for alias in node.names:
+                if alias.name.startswith("_"):
+                    bad.append(f"{os.path.relpath(path, SRC)}:{node.lineno} "
+                               f"imports {alias.name} from {node.module}")
+    assert not bad, "private cross-module imports:\n" + "\n".join(bad)
+
+
+#: every module that EXECUTES against an artifact — these must read their
+#: execution parameters from the lowered program, never ``artifact.m(...)``
+#: (export/serialization modules like deploy.py and artifact.py are exempt:
+#: they PRODUCE the meta the lowering stage consumes)
+RUNTIME_MODULES = (
+    "core/reference.py", "core/accelerator.py", "core/runtimes.py",
+    "board/runtime.py", "board/batched.py", "board/neuron_core.py",
+    "serving/scheduler.py", "faults/detect.py",
+)
+
+
+def test_runtime_modules_do_not_read_artifact_meta():
+    pat = re.compile(r"\.m\(")
+    bad = []
+    for rel in RUNTIME_MODULES:
+        path = os.path.join(SRC, rel)
+        with open(path) as f:
+            for i, line in enumerate(f, 1):
+                if pat.search(line):
+                    bad.append(f"{rel}:{i}: {line.strip()}")
+    assert not bad, ("runtime modules must consume LoweredProgram, not "
+                     "artifact.m(...):\n" + "\n".join(bad))
