@@ -7,16 +7,27 @@ comes out of the process-wide ``ProgramCache`` — the serving tier leans on
 this when the watchdog replaces a hung lane mid-traffic (the rebuilt lane
 must NOT pay XLA compile latency again while requests queue).
 
-Two measurements, both system-scope (host wall clock):
+Four measurements, all system-scope (host wall clock). Every scenario runs
+against a SCOPED cache (``lowering.install``) — never ``clear()`` on the
+process-wide singleton, which would yank programs out from under any live
+engine sharing the process:
 
   * per advertised family config: time-to-first-served-batch for a cold
-    process-state build (``PROGRAM_CACHE.clear()`` first — fresh bundle
-    closures force real recompilation) vs a cached rebuild. ``--check``
-    gates cached >= 3x faster than cold for every jitted spec (board-py
-    builds no jitted bundle and is reported ungated).
+    process-state build (fresh scoped cache — fresh bundle closures force
+    real recompilation) vs a cached rebuild. ``--check`` gates cached >= 3x
+    faster than cold for every jitted spec (board-py builds no jitted
+    bundle and is reported ungated).
   * the watchdog scenario end-to-end: a one-lane scheduler whose lane hangs
     on its first batch; the replacement lane's ``runtime.build`` span must
     record ``cache_hit`` in its meta, proving lane recovery rides the cache.
+  * the LRU eviction scenario: a budget sized for k of k+1 distinct
+    programs; the k+1th build must evict the least-recently-used entry
+    (eviction counter asserted) and re-lowering the victim must miss.
+  * the follower scenario: a leader's serialized envelope deserialized
+    against the local artifact, then built and served — gated >= 3x faster
+    than the cold build, because the follower skips ``_lower_uncached`` and
+    its reconstructed fingerprint keys straight into the compiled-bundle
+    tier.
 
 Emits ``results/bench/runtime_build.json`` (schema-validated).
 """
@@ -24,13 +35,15 @@ Emits ``results/bench/runtime_build.json`` (schema-validated).
 from __future__ import annotations
 
 import argparse
+import copy
 import sys
 import time
 
 import numpy as np
 
 from benchmarks import common as CM
-from repro.core.lowering import PROGRAM_CACHE
+from repro.core.artifact import Artifact
+from repro.core.lowering import ProgramCache, install, lower, program_nbytes
 from repro.core.runtimes import make_runtime
 from repro.telemetry import trace as ttrace
 from repro.telemetry.trace import Tracer
@@ -62,7 +75,7 @@ def _watchdog_row(art, images: np.ndarray) -> dict:
     make_runtime(art, "accelerator-event").forward(images[:1])  # warm cache
     plan = FaultPlan(seed=1, hang_batches=(0,), hang_s=2.0, lanes=(0,))
     tracer = Tracer()
-    prev = ttrace.install(tracer)
+    prev_t = ttrace.install(tracer)
     t0 = time.perf_counter()
     try:
         with ServingScheduler(art, spec="accelerator-event", workers=1,
@@ -74,7 +87,7 @@ def _watchdog_row(art, images: np.ndarray) -> dict:
             s.drain()
             st = s.stats()
     finally:
-        ttrace.install(prev)
+        ttrace.install(prev_t)
     wall_ms = 1e3 * (time.perf_counter() - t0)
     builds = [sp for sp in tracer.spans if sp.name == "runtime.build"]
     hits = [sp for sp in builds if sp.meta.get("cache_hit") is True]
@@ -89,6 +102,76 @@ def _watchdog_row(art, images: np.ndarray) -> dict:
             "telemetry": {"span_count": len(tracer.spans)}}
 
 
+def _variant(art, i: int) -> Artifact:
+    """A distinct-fingerprint sibling of the artifact (same arrays, bumped
+    e_max meta) — cheap distinct programs for the eviction scenario."""
+    meta = copy.deepcopy(art.meta)
+    meta["events"]["e_max"] = int(meta["events"]["e_max"]) + i
+    return Artifact(meta, dict(art.arrays))
+
+
+def _eviction_row(art, k: int = 3) -> dict:
+    """Budget sized for k of k+1 programs: the k+1th build must evict the
+    least-recently-used entry, and re-lowering the victim must miss."""
+    per = program_nbytes(lower(art, cache=False))
+    variants = [_variant(art, i) for i in range(k + 1)]
+    cache = ProgramCache(max_bytes=k * per)
+    prev = install(cache)
+    try:
+        for v in variants[:k]:
+            lower(v)
+        st_full = cache.stats()
+        lower(variants[k])          # exceeds the budget -> evicts variants[0]
+        st_evicted = cache.stats()
+        lower(variants[0])          # the LRU victim: must be a fresh miss
+        st_victim = cache.stats()
+    finally:
+        install(prev)
+    return {"config": "lru-eviction",
+            "scope": "system (program cache, host)",
+            "budget_bytes": k * per,
+            "program_bytes": per,
+            "programs_built": k + 1,
+            "evictions_at_budget": st_full["evictions"],
+            "evictions": st_evicted["evictions"],
+            "resident_programs": st_evicted["programs"],
+            "resident_bytes": st_evicted["bytes"],
+            "victim_remissed": int(st_victim["program_misses"]
+                                   == st_evicted["program_misses"] + 1)}
+
+
+def _follower_row(art, images: np.ndarray) -> dict:
+    """Leader lowers + compiles + publishes; a follower-style build
+    deserializes the envelope (skipping ``_lower_uncached``) and its
+    reconstructed fingerprint keys into the warm compiled-bundle tier —
+    gated >= 3x faster than the leader's cold build."""
+    from repro.core.program_io import deserialize_program, serialize_program
+
+    cache = ProgramCache()
+    prev = install(cache)
+    try:
+        cold_ms = _build_and_serve_ms(art, "accelerator-event", images)
+        blob = serialize_program(lower(art))
+
+        def follower_build_ms() -> float:
+            t0 = time.perf_counter()
+            prog = deserialize_program(blob, art, cache=False)
+            make_runtime(prog, "accelerator-event").forward(images)
+            return 1e3 * (time.perf_counter() - t0)
+
+        deser_ms = min(follower_build_ms() for _ in range(3))
+    finally:
+        install(prev)
+    speedup = cold_ms / deser_ms if deser_ms > 0 else float("inf")
+    return {"config": "follower-deserialize",
+            "scope": "system (runtime construction, host wall clock)",
+            "cold_build_ms": cold_ms,
+            "deserialize_build_ms": deser_ms,
+            "speedup": speedup,
+            "envelope_bytes": len(blob),
+            "gated": True}
+
+
 def main(quick: bool = False, check: bool = False) -> int:
     art, xte, _ = CM.get_artifact_and_data(quick=quick)
     images = xte[:16]
@@ -97,10 +180,13 @@ def main(quick: bool = False, check: bool = False) -> int:
           f"({len(images)} img first batch):")
     for spec in SPECS:
         serve = images[:4] if spec == "board-py" else images
-        PROGRAM_CACHE.clear()
-        cold_ms = _build_and_serve_ms(art, spec, serve)
-        cached_ms = min(_build_and_serve_ms(art, spec, serve)
-                        for _ in range(3))
+        prev = install(ProgramCache())
+        try:
+            cold_ms = _build_and_serve_ms(art, spec, serve)
+            cached_ms = min(_build_and_serve_ms(art, spec, serve)
+                            for _ in range(3))
+        finally:
+            install(prev)
         speedup = cold_ms / cached_ms if cached_ms > 0 else float("inf")
         rows.append({"runtime": spec,
                      "scope": "system (runtime construction, host wall "
@@ -113,12 +199,29 @@ def main(quick: bool = False, check: bool = False) -> int:
         print(f"  {spec:28s} cold {cold_ms:8.1f} ms   cached "
               f"{cached_ms:7.1f} ms   {speedup:6.1f}x{gate}")
 
-    wd = _watchdog_row(art, images)
+    prev = install(ProgramCache())
+    try:
+        wd = _watchdog_row(art, images)
+    finally:
+        install(prev)
     rows.append(wd)
     print(f"watchdog scenario: {wd['runtime_builds']} lane builds, "
           f"{wd['cache_hit_builds']} cache hits, "
           f"{wd['watchdog_timeouts']} timeouts, "
           f"{wd['lane_restarts']} restarts in {wd['wall_ms']:.0f} ms")
+
+    ev = _eviction_row(art)
+    rows.append(ev)
+    print(f"eviction scenario: budget {ev['budget_bytes']} B for "
+          f"{ev['programs_built']} x {ev['program_bytes']} B programs -> "
+          f"{ev['evictions']} evictions, {ev['resident_programs']} resident "
+          f"({ev['resident_bytes']} B)")
+
+    fo = _follower_row(art, images)
+    rows.append(fo)
+    print(f"follower scenario: cold {fo['cold_build_ms']:.1f} ms vs "
+          f"deserialize {fo['deserialize_build_ms']:.1f} ms "
+          f"({fo['speedup']:.1f}x, envelope {fo['envelope_bytes']} B)")
 
     CM.emit("runtime_build", rows)
 
@@ -126,7 +229,10 @@ def main(quick: bool = False, check: bool = False) -> int:
         bad = []
         for r in rows:
             if r.get("gated") and r["speedup"] < GATE_SPEEDUP:
-                bad.append(f"{r['runtime']}: cached build only "
+                name = r.get("runtime") or r.get("config")
+                fast = ("cached" if "cached_build_ms" in r
+                        else "deserialize")
+                bad.append(f"{name}: {fast} build only "
                            f"{r['speedup']:.1f}x faster than cold "
                            f"(gate {GATE_SPEEDUP}x)")
         if wd["watchdog_timeouts"] < 1:
@@ -138,6 +244,18 @@ def main(quick: bool = False, check: bool = False) -> int:
                        "the replacement lane recompiled from scratch")
         if wd["errors"]:
             bad.append(f"{wd['errors']} requests errored during recovery")
+        if ev["evictions_at_budget"] != 0:
+            bad.append(f"cache evicted {ev['evictions_at_budget']} programs "
+                       "while still within budget")
+        if ev["evictions"] < 1:
+            bad.append("k+1th build past the byte budget never evicted "
+                       "(evictions == 0)")
+        if ev["resident_programs"] != 3:
+            bad.append(f"{ev['resident_programs']} programs resident after "
+                       "eviction (expected k=3)")
+        if not ev["victim_remissed"]:
+            bad.append("re-lowering the LRU victim did not miss — the "
+                       "eviction was not real")
         if bad:
             print("CHECK FAILED: " + "; ".join(bad), file=sys.stderr)
             return 1

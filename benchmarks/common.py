@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core import deploy
 from repro.core.artifact import Artifact
-from repro.core.hw import TPU_V5E, PYNQ_Z2
+from repro.core.hw import TPU_V5E
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 ART_PATH = os.path.join(RESULTS, "mnist_ttfs_artifact.npz")

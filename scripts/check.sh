@@ -28,7 +28,8 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # lint first when available (CI installs ruff; the dev container may not
-# have it — the gate is advisory there, never silently different)
+# have it — the gate is advisory there, never silently different). Rule
+# set lives in pyproject: error classes + F401/F811/F841 + E7.
 if command -v ruff >/dev/null 2>&1; then
     ruff check src tests benchmarks
 else

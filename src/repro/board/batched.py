@@ -35,7 +35,7 @@ from repro.core import ttfs
 from repro.core.artifact import Artifact
 from repro.core.events import step_counts
 from repro.core.hw import BoardCostModel, PYNQ_COST
-from repro.core.lowering import PROGRAM_CACHE, LoweredProgram, lower
+from repro.core.lowering import LoweredProgram, get_cache, lower
 from repro.core.types import SNNOutput, decode_output
 from repro.telemetry import trace as ttrace
 
@@ -65,7 +65,8 @@ def _build_core(prog: LoweredProgram, kernel: str, latency_mode: bool,
             res = lif_ops.lif_fused(currents.reshape(Tc, B, n_pad),
                                     thr_grouped.reshape(n_pad),
                                     leak_shift)
-            shaped = lambda a: a.reshape(B, groups_used, lane)
+            def shaped(a):
+                return a.reshape(B, groups_used, lane)
             return res._replace(first_spike=shaped(res.first_spike),
                                 v_final=shaped(res.v_final)), None
         return lif_scan(currents, thr_grouped, leak_shift, T), None
@@ -132,7 +133,7 @@ class SNNBoardBatched:
         self.w_padded = prog.w_padded                           # (N_in, n_pad)
         self.thr_grouped = prog.thr_padded.reshape(self.groups_used,
                                                    cost.lane)
-        self._core, self.cache_hit = PROGRAM_CACHE.bundle(
+        self._core, self.cache_hit = get_cache().bundle(
             ("board-batched", prog.fingerprint, kernel,
              self.latency_mode, cost),
             lambda: _build_core(prog, kernel, self.latency_mode, cost))

@@ -7,7 +7,11 @@ Goldens close that hole: for a pinned seed set, the reference outputs (labels,
 first-spike times, final membranes, steps) and the board cost account
 (cycles, energy, events, stalls) are snapshotted to ``tests/golden/`` and
 committed; ``check()`` regenerates each case from its seed and compares
-array-for-array bit-exactly.
+array-for-array bit-exactly. The manifest additionally pins each seed's
+**program fingerprint** (a cache-bypassing ``lower()`` of the fuzzed
+artifact), so a lowering-semantics change — new scalar, different coercion,
+reordered fingerprint input — surfaces as a reviewed golden diff even when
+every runtime output is unchanged.
 
 Regeneration (after an INTENTIONAL semantics change):
 
@@ -37,17 +41,20 @@ GOLDEN_DIR = os.path.normpath(os.path.join(
     os.path.dirname(__file__), "..", "..", "..", "tests", "golden"))
 
 MANIFEST = "manifest.json"
-FORMAT = 1
+FORMAT = 2
 
 
 def golden_path(seed: int, dirpath: str = GOLDEN_DIR) -> str:
     return os.path.join(dirpath, f"conformance_seed{seed}.npz")
 
 
-def compute_golden(seed: int) -> tuple[dict[str, np.ndarray], str]:
+def compute_golden(seed: int) -> tuple[dict[str, np.ndarray], str, str]:
     """Regenerate the golden arrays for one pinned seed. Returns
-    (arrays, artifact_fingerprint)."""
+    (arrays, artifact_fingerprint, program_fingerprint)."""
+    from repro.core.lowering import lower
+
     case = fuzz_case(seed)
+    prog_fp = lower(case.artifact, cache=False).fingerprint
     ref = make_runtime(case.artifact, "reference")
     out = ref.forward(case.images)
     board = make_runtime(case.artifact, "board")
@@ -64,17 +71,19 @@ def compute_golden(seed: int) -> tuple[dict[str, np.ndarray], str]:
         "board_stalls": np.asarray(tr.stalls, np.int64),
         "board_energy_nj": np.asarray(tr.energy_nj, np.float64),
     }
-    return arrays, case.artifact.fingerprint()
+    return arrays, case.artifact.fingerprint(), prog_fp
 
 
 def regen(seeds=PINNED_SEEDS, dirpath: str = GOLDEN_DIR) -> dict:
     """(Re)write the golden snapshots + manifest. Returns the manifest."""
     os.makedirs(dirpath, exist_ok=True)
-    manifest = {"format": FORMAT, "seeds": list(seeds), "fingerprints": {}}
+    manifest = {"format": FORMAT, "seeds": list(seeds), "fingerprints": {},
+                "program_fingerprints": {}}
     for seed in seeds:
-        arrays, fp = compute_golden(seed)
+        arrays, fp, prog_fp = compute_golden(seed)
         np.savez(golden_path(seed, dirpath), **arrays)
         manifest["fingerprints"][str(seed)] = fp
+        manifest["program_fingerprints"][str(seed)] = prog_fp
     with open(os.path.join(dirpath, MANIFEST), "w") as f:
         json.dump(manifest, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -110,7 +119,7 @@ def check(seeds=None, dirpath: str = GOLDEN_DIR) -> list[GoldenDiff]:
             diffs.append(GoldenDiff(seed, "<missing>",
                                     f"snapshot {path} not found"))
             continue
-        arrays, fp = compute_golden(seed)
+        arrays, fp, prog_fp = compute_golden(seed)
         want_fp = manifest["fingerprints"].get(str(seed))
         if want_fp != fp:
             diffs.append(GoldenDiff(
@@ -118,6 +127,13 @@ def check(seeds=None, dirpath: str = GOLDEN_DIR) -> list[GoldenDiff]:
                 f"artifact fingerprint {fp[:12]}… != manifest "
                 f"{str(want_fp)[:12]}… — the fuzzer or artifact format "
                 f"changed; rerun --regen if intentional"))
+        want_prog = manifest.get("program_fingerprints", {}).get(str(seed))
+        if want_prog != prog_fp:
+            diffs.append(GoldenDiff(
+                seed, "<program>",
+                f"program fingerprint {prog_fp[:12]}… != manifest "
+                f"{str(want_prog)[:12]}… — lowering semantics changed; "
+                f"rerun --regen if intentional"))
         with np.load(path) as z:
             stored = {k: z[k] for k in z.files}
         for name, fresh in arrays.items():

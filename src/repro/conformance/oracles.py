@@ -11,6 +11,10 @@ the same artifact and adversarial image batch, asserting:
                   program fingerprint and every scalar, the process cache
                   returns the same program, and every advertised runtime's
                   ``.program`` carries that one fingerprint;
+  program-io    — ``deserialize_program(serialize_program(p), artifact)`` is
+                  fingerprint-identical and array-bit-identical to a fresh
+                  lower (the cross-host broadcast path reconstructs the
+                  leader's exact program from envelope + local artifact);
   differential  — labels, first-spike times, final membranes AND step counts
                   are bit-exact against the software reference for every spec
                   (alias specs must construct an identical runtime config and
@@ -146,6 +150,9 @@ def run_case(case: FuzzedCase, specs=ADVERTISED_SPECS,
 
     # ---- lowering: deterministic, and every runtime consumes ONE program -
     outcomes.append(_lowering_oracle(art, specs))
+
+    # ---- program-io: the serialized envelope reconstructs bit-identically
+    outcomes.append(_program_io_oracle(art))
 
     # ---- differential: every advertised spec vs the reference ------------
     ref_rt = make_runtime(art, "reference")
@@ -309,6 +316,47 @@ def _lowering_oracle(art, specs) -> OracleOutcome:
                         f"({prog.fingerprint[:12]} != {a.fingerprint[:12]})")
     return OracleOutcome("lowering", "*", not errs, "; ".join(errs),
                          {"fingerprint": a.fingerprint[:16]})
+
+
+def _program_io_oracle(art) -> OracleOutcome:
+    """Program-io conformance: the broadcast envelope is a faithful carrier.
+    A deserialized program must be indistinguishable from a fresh lower —
+    same fingerprint, same scalars, same plans, bit-identical device arrays —
+    and a truncated/tampered envelope must be rejected, never half-applied."""
+    from repro.core.lowering import REQUIRED_ARRAYS, lower
+    from repro.core.program_io import (ProgramIOError, deserialize_program,
+                                       serialize_program)
+
+    errs: list[str] = []
+    fresh = lower(art, cache=False)
+    blob = serialize_program(fresh)
+    rt = deserialize_program(blob, art, cache=False)
+    if rt.fingerprint != fresh.fingerprint:
+        errs.append(f"roundtrip fingerprint {rt.fingerprint[:12]} != fresh "
+                    f"lower's {fresh.fingerprint[:12]}")
+    scalars = ("T", "x_min", "e_max", "leak_shift", "n_in", "n_out",
+               "n_groups", "per_group", "fallback", "scale", "n_pad", "lane")
+    for f in scalars:
+        if getattr(rt, f) != getattr(fresh, f):
+            errs.append(f"roundtrip scalar {f}: {getattr(rt, f)!r} != "
+                        f"{getattr(fresh, f)!r}")
+    if rt.encode != fresh.encode or rt.decode != fresh.decode:
+        errs.append("roundtrip encode/decode plans differ")
+    for name in REQUIRED_ARRAYS:
+        a, b = _np(getattr(rt, name)), _np(getattr(fresh, name))
+        if not (a.shape == b.shape and a.dtype == b.dtype
+                and np.array_equal(a, b)):
+            errs.append(f"roundtrip array {name} is not bit-identical")
+    # serialization is canonical: same program, same bytes
+    if serialize_program(rt) != blob:
+        errs.append("re-serializing the roundtripped program changed bytes")
+    try:
+        deserialize_program(blob[:-2], art, cache=False)
+        errs.append("truncated envelope was accepted")
+    except ProgramIOError:
+        pass
+    return OracleOutcome("program-io", "*", not errs, "; ".join(errs),
+                         {"envelope_bytes": len(blob)})
 
 
 def _telemetry_oracle(case: FuzzedCase, py_slice: int) -> OracleOutcome:

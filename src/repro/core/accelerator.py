@@ -40,7 +40,7 @@ from repro.core import ttfs
 from repro.core.artifact import Artifact
 from repro.core.events import EventFrames, PAD, pack_events_batched
 from repro.core.lif_dynamics import lif_scan, lif_scan_early_exit
-from repro.core.lowering import PROGRAM_CACHE, LoweredProgram, lower
+from repro.core.lowering import LoweredProgram, get_cache, lower
 from repro.core.types import SNNOutput, decode_output
 from repro.telemetry import trace as ttrace
 
@@ -170,7 +170,7 @@ class SNNAccelerator:
         self.n_out = prog.n_out
         self.w_padded = prog.w_padded          # (N_in, N_pad) int8
         self.thr_padded = prog.thr_padded      # (N_pad,) int32
-        bundle, self.cache_hit = PROGRAM_CACHE.bundle(
+        bundle, self.cache_hit = get_cache().bundle(
             ("accelerator", prog.fingerprint, mode, kernel),
             lambda: _build_bundle(prog, mode, kernel))
         if mode == "batch":

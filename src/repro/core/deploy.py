@@ -87,7 +87,8 @@ def calibrate_thresholds(w_int8: np.ndarray, meta: dict,
     calibration TTFS accuracy wins. The chosen leak_shift is written back
     into the metadata (the artifact carries the deployed dynamics).
     Deterministic; returns per-neuron int32."""
-    T = meta["encode"]["T"]; x_min = meta["encode"]["x_min"]
+    T = meta["encode"]["T"]
+    x_min = meta["encode"]["x_min"]
     best = (None, -1.0, meta["lif"]["leak_shift"])
     for ls in sorted({meta["lif"]["leak_shift"], 31}):
         peaks = _per_neuron_peaks(w_int8, T, x_min, ls, calib_images)

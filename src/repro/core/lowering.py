@@ -15,12 +15,21 @@ content, never by object identity:
   * program cache — ``artifact.fingerprint() → LoweredProgram``. The
     fingerprint is recomputed from the actual array bytes + volatile-stripped
     meta, so a fault-pass clone (different bytes) can never alias the
-    pristine program.
+    pristine program. The tier is a **byte-budget LRU**: each program is
+    charged the device-array bytes it pins (``program_nbytes``), a hit
+    refreshes recency, and inserts past ``max_bytes`` evict from the cold
+    end — bundles die with their program (bundle keys carry the program
+    fingerprint at index 1).
   * bundle cache — ``(family, program fingerprint, mode/kernel/latency/cost)
     → jitted-callable bundle``. jax caches compiled executables on the
     FUNCTION OBJECT, so sharing the bundle across runtime instances (e.g.
     every serving lane, including watchdog-spawned replacements) means one
     compile per distinct config per process instead of one per lane.
+
+The process-wide default lives in ``PROGRAM_CACHE``; call sites resolve it
+through ``get_cache()`` so benches and tests can swap in a scoped cache with
+``install()`` (mirroring ``telemetry.trace.install``) instead of clearing
+the singleton out from under live engines.
 
 Static fault plans are a lowering pass: ``lower_with_faults`` corrupts an
 in-memory CLONE of the artifact (pristine artifact untouched — it backs the
@@ -33,7 +42,9 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import threading
+from collections import OrderedDict
 from typing import Any, Callable
 
 import jax.numpy as jnp
@@ -135,11 +146,22 @@ class LoweredProgram:
     cost: BoardCostModel
 
     def host_arrays(self) -> dict[str, np.ndarray]:
-        """The artifact's raw numpy arrays (host side, never device)."""
-        return self.artifact.arrays
+        """The artifact's raw numpy arrays (host side, never device).
+
+        Defensive: a fresh dict of read-only views. The cached program is
+        shared by every fingerprint-keyed hit in the process, so handing out
+        the live ``artifact.arrays`` dict would let one caller's in-place
+        mutation silently poison all later hits without changing the cache
+        key. Callers who need to write must copy explicitly."""
+        out: dict[str, np.ndarray] = {}
+        for name, arr in self.artifact.arrays.items():
+            view = arr.view()
+            view.setflags(write=False)
+            out[name] = view
+        return out
 
 
-def _program_fingerprint(art_fp: str, scalars: dict[str, Any]) -> str:
+def program_fingerprint(art_fp: str, scalars: dict[str, Any]) -> str:
     h = hashlib.sha256()
     h.update(art_fp.encode())
     h.update(json.dumps(scalars, sort_keys=True).encode())
@@ -167,6 +189,14 @@ def _lower_uncached(art: Artifact) -> LoweredProgram:
     fallback = _meta(art, ("readout", "fallback"), "str")
     scale = _meta(art, ("quant", "scale"), "float")
     lane = _meta(art, ("codesign", "lane"), "int")
+    if e_max <= 0:
+        raise LoweringError(f"events.e_max={e_max} must be positive")
+    if per_group <= 0:
+        raise LoweringError(f"readout.per_group={per_group} must be positive")
+    if lane <= 0:
+        raise LoweringError(f"codesign.lane={lane} must be positive")
+    if scale <= 0:
+        raise LoweringError(f"quant.scale={scale} must be positive")
     if fallback not in ("membrane", "zero"):
         raise LoweringError(f"readout.fallback={fallback!r} is not a known "
                             f"no-spike policy ('membrane' | 'zero')")
@@ -191,7 +221,7 @@ def _lower_uncached(art: Artifact) -> LoweredProgram:
                "fallback": fallback, "scale": scale, "n_pad": n_pad,
                "lane": lane}
     return LoweredProgram(
-        fingerprint=_program_fingerprint(art.fingerprint(), scalars),
+        fingerprint=program_fingerprint(art.fingerprint(), scalars),
         artifact=art,
         T=T, x_min=x_min, e_max=e_max, leak_shift=leak_shift,
         n_in=n_in, n_out=n_out, n_groups=n_groups, per_group=per_group,
@@ -207,37 +237,102 @@ def _lower_uncached(art: Artifact) -> LoweredProgram:
         cost=PYNQ_COST)
 
 
+def program_nbytes(prog: LoweredProgram) -> int:
+    """Bytes a resident program pins: the sum over its device arrays.
+
+    The LRU budget charges device arrays only — scalars and plans are noise
+    next to the weight matrices, and the host-side artifact backs the
+    scrub/reload path regardless of cache residency."""
+    return sum(int(getattr(prog, name).nbytes) for name in REQUIRED_ARRAYS)
+
+
+#: default byte budget for the program tier (overridable per-process)
+DEFAULT_MAX_BYTES = int(os.environ.get("REPRO_PROGRAM_CACHE_BYTES",
+                                       1 << 30))
+
+
 class ProgramCache:
     """Process-wide content-addressed caches for lowered programs and their
     compiled-callable bundles. Keys are content fingerprints plus the exact
     runtime config, never python object identity — a corrupted clone or a
     re-exported artifact gets its own entry, a watchdog-spawned replacement
-    lane over the same artifact gets a hit."""
+    lane over the same artifact gets a hit.
 
-    def __init__(self):
+    The program tier is a byte-budget LRU (``max_bytes``, ``None`` =
+    unbounded): hits refresh recency, inserts past the budget evict from
+    the cold end, and every bundle whose key carries the victim's program
+    fingerprint (index 1 by convention) is dropped with it — a compiled
+    callable over an evicted program would otherwise pin its device arrays
+    forever through the closure."""
+
+    def __init__(self, max_bytes: int | None = DEFAULT_MAX_BYTES):
         self._lock = threading.Lock()
-        self._programs: dict[str, LoweredProgram] = {}
+        self._programs: OrderedDict[str, LoweredProgram] = OrderedDict()
         self._bundles: dict[tuple, Any] = {}
+        self.max_bytes = max_bytes
+        self.bytes = 0
+        self.evictions = 0
         self.program_hits = 0
         self.program_misses = 0
         self.bundle_hits = 0
         self.bundle_misses = 0
 
+    # -- internal (lock held) -------------------------------------------
+    def _install_locked(self, key: str,
+                        prog: LoweredProgram) -> tuple[LoweredProgram, bool]:
+        existing = self._programs.get(key)
+        if existing is not None:
+            self._programs.move_to_end(key)
+            return existing, False
+        self._programs[key] = prog
+        self.bytes += program_nbytes(prog)
+        self._evict_locked()
+        return prog, True
+
+    def _evict_locked(self) -> None:
+        if self.max_bytes is None:
+            return
+        while self.bytes > self.max_bytes and len(self._programs) > 1:
+            victim_key, victim = next(iter(self._programs.items()))
+            del self._programs[victim_key]
+            self.bytes -= program_nbytes(victim)
+            self.evictions += 1
+            dead = [k for k in self._bundles
+                    if len(k) > 1 and k[1] == victim.fingerprint]
+            for k in dead:
+                del self._bundles[k]
+
+    # -- program tier ---------------------------------------------------
     def program(self, art: Artifact) -> tuple[LoweredProgram, bool]:
         key = art.fingerprint()
         with self._lock:
             prog = self._programs.get(key)
             if prog is not None:
+                self._programs.move_to_end(key)
                 self.program_hits += 1
                 return prog, True
         prog = _lower_uncached(art)
         with self._lock:
             # first lowering wins (two racing lowers of the same artifact
-            # produce equal programs anyway — determinism is the oracle)
-            cached = self._programs.setdefault(key, prog)
-            self.program_misses += 1
-        return cached, False
+            # produce equal programs anyway — determinism is the oracle).
+            # Only the installing thread counts a miss: the loser's build is
+            # discarded, so counting it would over-count distinct builds.
+            cached, installed = self._install_locked(key, prog)
+            if installed:
+                self.program_misses += 1
+            else:
+                self.program_hits += 1
+        return cached, not installed
 
+    def seed(self, art_fp: str, prog: LoweredProgram) -> LoweredProgram:
+        """Install an externally-derived program (the ``deserialize`` path)
+        under its artifact fingerprint. First installer wins, same as a
+        racing lower; returns the resident program."""
+        with self._lock:
+            cached, _ = self._install_locked(art_fp, prog)
+            return cached
+
+    # -- bundle tier ----------------------------------------------------
     def bundle(self, key: tuple, build: Callable[[], Any]) -> tuple[Any, bool]:
         with self._lock:
             if key in self._bundles:
@@ -245,14 +340,21 @@ class ProgramCache:
                 return self._bundles[key], True
         built = build()
         with self._lock:
-            cached = self._bundles.setdefault(key, built)
+            if key in self._bundles:
+                # a racing build won the install; this thread's compile is
+                # discarded and counts as a hit, not a second miss
+                self.bundle_hits += 1
+                return self._bundles[key], True
+            self._bundles[key] = built
             self.bundle_misses += 1
-        return cached, False
+        return built, False
 
     def clear(self) -> None:
         with self._lock:
             self._programs.clear()
             self._bundles.clear()
+            self.bytes = 0
+            self.evictions = 0
             self.program_hits = self.program_misses = 0
             self.bundle_hits = self.bundle_misses = 0
 
@@ -260,14 +362,37 @@ class ProgramCache:
         with self._lock:
             return {"programs": len(self._programs),
                     "bundles": len(self._bundles),
+                    "bytes": self.bytes,
+                    "max_bytes": self.max_bytes,
+                    "evictions": self.evictions,
                     "program_hits": self.program_hits,
                     "program_misses": self.program_misses,
                     "bundle_hits": self.bundle_hits,
                     "bundle_misses": self.bundle_misses}
 
 
-#: the process-wide cache every ``make_runtime`` / serving lane shares
+#: the process-wide default cache every ``make_runtime`` / serving lane shares
 PROGRAM_CACHE = ProgramCache()
+
+_cache: ProgramCache = PROGRAM_CACHE
+
+
+def get_cache() -> ProgramCache:
+    """The cache in effect for this process (the swap scope's, else the
+    process-wide ``PROGRAM_CACHE``)."""
+    return _cache
+
+
+def install(cache: ProgramCache | None) -> ProgramCache:
+    """Swap the active program cache, returning the previous one (mirrors
+    ``telemetry.trace.install``). ``install(None)`` restores the process-wide
+    default. Benches and tests scope their cache churn this way instead of
+    calling ``clear()`` on the shared singleton, which would yank programs
+    out from under any live engine in the process."""
+    global _cache
+    prev = _cache
+    _cache = PROGRAM_CACHE if cache is None else cache
+    return prev
 
 
 def lower(artifact: Artifact | LoweredProgram, *,
@@ -284,7 +409,7 @@ def lower(artifact: Artifact | LoweredProgram, *,
         raise TypeError(f"cannot lower {type(artifact).__name__} "
                         f"(expected Artifact or LoweredProgram)")
     if cache:
-        prog, _ = PROGRAM_CACHE.program(artifact)
+        prog, _ = get_cache().program(artifact)
         return prog
     return _lower_uncached(artifact)
 

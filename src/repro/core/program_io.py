@@ -1,0 +1,153 @@
+"""Cross-process ``LoweredProgram`` distribution: serialize / deserialize.
+
+The ROADMAP item this implements is "lower once per *process group*": in
+multi-host serving every host holds the same exported artifact on disk, so
+shipping device arrays over the wire would be pure waste. The envelope
+therefore carries only what the arrays cannot reproduce — the typed scalars,
+the encode/decode plans, and the content fingerprints — as canonical JSON:
+
+    {"format": 1,
+     "program_fingerprint": "...", "artifact_fingerprint": "...",
+     "scalars": {"T": ..., "x_min": ..., ...},
+     "encode": {...}, "decode": {...},
+     "arrays": {"w_float": "<sha256>", ...}}
+
+``deserialize_program`` re-maps the arrays from the *local* artifact and
+re-verifies every one against the envelope's hashes, recomputes the program
+fingerprint from (artifact fingerprint, scalars) and demands it match the
+envelope's — so a follower either reconstructs a program bit-identical to
+the leader's lower (skipping ``_lower_uncached`` entirely) or fails loudly
+with the first mismatched field named. The conformance ``program-io`` oracle
+pins the roundtrip on every fuzzed artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+
+from repro.core.artifact import Artifact, array_hash
+from repro.core.hw import PYNQ_COST
+from repro.core.lowering import (REQUIRED_ARRAYS, LoweredProgram,
+                                 get_cache, program_fingerprint)
+from repro.core.types import DecodePlan, EncodePlan
+
+FORMAT_VERSION = 1
+
+#: envelope scalar order mirrors the ``scalars`` dict in ``_lower_uncached``
+SCALAR_FIELDS = ("T", "x_min", "e_max", "leak_shift", "n_in", "n_out",
+                 "n_groups", "per_group", "fallback", "scale", "n_pad",
+                 "lane")
+
+
+class ProgramIOError(ValueError):
+    """The envelope does not reconstruct a valid program on this host."""
+
+
+def serialize_program(prog: LoweredProgram) -> bytes:
+    """Canonical JSON envelope for one lowered program (no array payload)."""
+    if not isinstance(prog, LoweredProgram):
+        raise TypeError(f"cannot serialize {type(prog).__name__} "
+                        f"(expected LoweredProgram)")
+    art = prog.artifact
+    envelope = {
+        "format": FORMAT_VERSION,
+        "program_fingerprint": prog.fingerprint,
+        "artifact_fingerprint": art.fingerprint(),
+        "scalars": {f: getattr(prog, f) for f in SCALAR_FIELDS},
+        "encode": dataclasses.asdict(prog.encode),
+        "decode": dataclasses.asdict(prog.decode),
+        "arrays": {n: array_hash(art.arrays[n]) for n in REQUIRED_ARRAYS},
+    }
+    return json.dumps(envelope, sort_keys=True,
+                      separators=(",", ":")).encode()
+
+
+def _load_envelope(blob: bytes) -> dict:
+    try:
+        env = json.loads(blob)
+    except (ValueError, UnicodeDecodeError) as e:
+        raise ProgramIOError(f"envelope is not valid JSON: {e}") from None
+    if not isinstance(env, dict):
+        raise ProgramIOError(f"envelope must be a JSON object, "
+                             f"got {type(env).__name__}")
+    if env.get("format") != FORMAT_VERSION:
+        raise ProgramIOError(f"envelope format {env.get('format')!r} != "
+                             f"supported {FORMAT_VERSION}")
+    for key in ("program_fingerprint", "artifact_fingerprint", "scalars",
+                "encode", "decode", "arrays"):
+        if key not in env:
+            raise ProgramIOError(f"envelope is missing {key!r}")
+    return env
+
+
+def deserialize_program(blob: bytes, artifact: Artifact, *,
+                        cache: bool = True) -> LoweredProgram:
+    """Reconstruct a leader's program against the local artifact copy.
+
+    Verification order is deliberate — cheapest and most diagnostic first:
+    artifact fingerprint (whole-artifact identity), then per-array hashes
+    (names the drifted array), then the recomputed program fingerprint
+    (binds the scalars). With ``cache=True`` the program is seeded into the
+    active cache so later ``lower(artifact)`` / ``make_runtime`` calls on
+    this host hit without ever lowering."""
+    if not isinstance(artifact, Artifact):
+        raise TypeError(f"cannot deserialize against "
+                        f"{type(artifact).__name__} (expected Artifact)")
+    env = _load_envelope(blob)
+    art_fp = artifact.fingerprint()
+    if env["artifact_fingerprint"] != art_fp:
+        raise ProgramIOError(
+            f"local artifact fingerprint {art_fp[:12]}... != envelope's "
+            f"{str(env['artifact_fingerprint'])[:12]}... — the follower's "
+            f"artifact copy is not the one the leader lowered")
+    if set(env["arrays"]) != set(REQUIRED_ARRAYS):
+        raise ProgramIOError(
+            f"envelope array set {sorted(env['arrays'])} != required "
+            f"{sorted(REQUIRED_ARRAYS)}")
+    for name in REQUIRED_ARRAYS:
+        if name not in artifact.arrays:
+            raise ProgramIOError(f"local artifact is missing array {name!r}")
+        local = array_hash(artifact.arrays[name])
+        if local != env["arrays"][name]:
+            raise ProgramIOError(
+                f"array {name!r} hash mismatch: local {local[:12]}... != "
+                f"envelope {str(env['arrays'][name])[:12]}...")
+    scalars = env["scalars"]
+    if set(scalars) != set(SCALAR_FIELDS):
+        raise ProgramIOError(
+            f"envelope scalar set {sorted(scalars)} != expected "
+            f"{sorted(SCALAR_FIELDS)}")
+    expect_fp = program_fingerprint(art_fp, scalars)
+    if expect_fp != env["program_fingerprint"]:
+        raise ProgramIOError(
+            f"recomputed program fingerprint {expect_fp[:12]}... != "
+            f"envelope's {str(env['program_fingerprint'])[:12]}... — "
+            f"scalars were altered in transit")
+    try:
+        encode = EncodePlan(**env["encode"])
+        decode = DecodePlan(**env["decode"])
+    except TypeError as e:
+        raise ProgramIOError(f"envelope plan fields do not reconstruct "
+                             f"encode/decode plans: {e}") from None
+    prog = LoweredProgram(
+        fingerprint=expect_fp,
+        artifact=artifact,
+        T=scalars["T"], x_min=scalars["x_min"], e_max=scalars["e_max"],
+        leak_shift=scalars["leak_shift"], n_in=scalars["n_in"],
+        n_out=scalars["n_out"], n_groups=scalars["n_groups"],
+        per_group=scalars["per_group"], fallback=scalars["fallback"],
+        scale=scalars["scale"], n_pad=scalars["n_pad"],
+        lane=scalars["lane"],
+        w_float=jnp.asarray(artifact["w_float"]),
+        w_int8=jnp.asarray(artifact["w_int8"]),
+        thresholds=jnp.asarray(artifact["thresholds"]),
+        w_padded=jnp.asarray(artifact["w_padded"]),
+        thr_padded=jnp.asarray(artifact["thr_padded"]),
+        encode=encode, decode=decode,
+        cost=PYNQ_COST)
+    if cache:
+        prog = get_cache().seed(art_fp, prog)
+    return prog

@@ -33,7 +33,7 @@ from __future__ import annotations
 from typing import Callable
 
 from repro.core.artifact import Artifact
-from repro.core.lowering import PROGRAM_CACHE, LoweredProgram, lower
+from repro.core.lowering import LoweredProgram, get_cache, lower
 from repro.telemetry import trace as ttrace
 
 _REGISTRY: dict[str, Callable] = {}
@@ -109,7 +109,7 @@ def make_runtime(artifact: Artifact | LoweredProgram, spec: str, *,
     if isinstance(artifact, LoweredProgram):
         program, program_hit = artifact, True
     else:
-        program, program_hit = PROGRAM_CACHE.program(artifact)
+        program, program_hit = get_cache().program(artifact)
     rec = ttrace.get()
     if not rec.enabled:
         return _REGISTRY[family](program, opts, **kw)
@@ -119,6 +119,9 @@ def make_runtime(artifact: Artifact | LoweredProgram, spec: str, *,
         if sp is not None:
             sp.meta["cache_hit"] = bool(getattr(rt, "cache_hit",
                                                 program_hit))
+            cs = get_cache().stats()
+            sp.meta["cache_bytes"] = cs["bytes"]
+            sp.meta["cache_evictions"] = cs["evictions"]
         return rt
 
 

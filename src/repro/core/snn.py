@@ -92,18 +92,19 @@ class LIF(Module):
 class Sequential(Module):
     def __init__(self, *layers: Module):
         self.layers = list(layers)
-        if all(getattr(l, "params", None) is not None for l in self.layers):
-            self.params = [l.params for l in self.layers]
+        if all(getattr(layer, "params", None) is not None
+               for layer in self.layers):
+            self.params = [layer.params for layer in self.layers]
         else:
             self.params = None
 
     def init(self, key):
         keys = jax.random.split(key, len(self.layers))
-        return [l.init(k) for l, k in zip(self.layers, keys)]
+        return [layer.init(k) for layer, k in zip(self.layers, keys)]
 
     def apply(self, params, x):
-        for l, p in zip(self.layers, params):
-            x = l.apply(p, x)
+        for layer, p in zip(self.layers, params):
+            x = layer.apply(p, x)
         return x
 
 
@@ -135,7 +136,9 @@ class SNN(Module):
 
     # -- introspection used by deploy.export -------------------------------
     def linear_layers(self) -> Sequence[Linear]:
-        return [l for l in self.body.layers if isinstance(l, Linear)]
+        return [layer for layer in self.body.layers
+                if isinstance(layer, Linear)]
 
     def lif_layers(self) -> Sequence[LIF]:
-        return [l for l in self.body.layers if isinstance(l, LIF)]
+        return [layer for layer in self.body.layers
+                if isinstance(layer, LIF)]

@@ -162,14 +162,14 @@ def path_str(path) -> str:
 def _strip_data(logical) -> tuple:
     """Remove FSDP ('data') requests from a logical-axes tuple (TP-only)."""
     out = []
-    for l in logical:
-        if l == "data":
+    for lg in logical:
+        if lg == "data":
             out.append(None)
-        elif isinstance(l, tuple):
-            kept = tuple(x for x in l if x != "data")
+        elif isinstance(lg, tuple):
+            kept = tuple(x for x in lg if x != "data")
             out.append(kept if kept else None)
         else:
-            out.append(l)
+            out.append(lg)
     return tuple(out)
 
 

@@ -146,12 +146,12 @@ class MembraneUpsetInjector:
         if not self.rate or self._rng.rand() >= self.rate:
             return
         g = int(self._rng.randint(core.groups_used))
-        l = int(self._rng.randint(core.lane))
+        li = int(self._rng.randint(core.lane))
         bit = int(self._rng.randint(MEMBRANE_BITS))
-        word = int(core.v[g, l]) ^ (1 << bit)
+        word = int(core.v[g, li]) ^ (1 << bit)
         if word >= 2 ** 31:
             word -= 2 ** 32
-        core.v[g, l] = np.int32(word)
+        core.v[g, li] = np.int32(word)
         self.ecc_hits += 1
 
 

@@ -78,8 +78,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(kb == kv_blocks - 1)
     def _finalize():
-        l = l_scr[...]
-        out = acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+        lsum = l_scr[...]
+        out = acc_scr[...] / jnp.where(lsum == 0.0, 1.0, lsum)
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 

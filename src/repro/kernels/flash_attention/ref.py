@@ -26,8 +26,8 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         mask = mask & (kpos[None, :] > qpos[:, None] - window)
     s = jnp.where(mask[None, None], s, -1e30)
     p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
-    l = jnp.sum(p, axis=-1, keepdims=True)
-    p = p / jnp.where(l == 0.0, 1.0, l)
+    lsum = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(lsum == 0.0, 1.0, lsum)
     # rows with no visible kv (possible under SWA offsets) -> zero output
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)

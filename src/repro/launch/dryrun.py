@@ -25,10 +25,9 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import shapes as shp
-from repro.configs.registry import ALIASES, ARCH_IDS, get_config
+from repro.configs.registry import ALIASES, get_config
 from repro.distributed import roofline as RL
 from repro.distributed import sharding as SH
 from repro.launch import specs as SP

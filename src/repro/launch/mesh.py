@@ -1,4 +1,4 @@
-"""Production mesh construction.
+"""Production mesh construction and the lower-once program broadcast hook.
 
 A FUNCTION, not a module-level constant: importing this module never touches
 jax device state (required so smoke tests see 1 device while the dry-run
@@ -10,9 +10,19 @@ sees its 512 placeholder devices).
 The "pod" axis is pure data parallelism across pods (gradient all-reduce
 over DCI); "data" is in-pod data parallel / FSDP; "model" is tensor/expert
 parallel over ICI.
+
+``broadcast_program`` is the process-group companion to the per-process
+``ProgramCache``: the leader lowers once and publishes the serialized
+envelope, every follower deserializes it against its local artifact copy
+(skipping ``_lower_uncached``) and can diff program fingerprints against the
+leader's. Transport is pluggable — ``file_publisher``/``file_fetcher`` cover
+the shared-filesystem launch topology ``launch/serve.py`` uses.
 """
 
 from __future__ import annotations
+
+import os
+import time
 
 import jax
 
@@ -37,3 +47,54 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for unit tests (requires >= prod(shape) host devices)."""
     return build_mesh(shape, axes)
+
+
+# ------------------------------------------------ program broadcast hook
+def broadcast_program(artifact, *, leader, publish=None, fetch=None):
+    """Lower once per process group.
+
+    Leader: lowers the artifact (through the active program cache) and, if
+    ``publish`` is given, sends the serialized envelope to the group.
+    Follower: ``fetch()``es the leader's envelope and deserializes it against
+    the local artifact copy — never calling the lowering stage. Both roles
+    return the resident ``LoweredProgram``; fingerprint equality across the
+    group is the cross-host determinism check conformance pins in-process.
+    """
+    from repro.core.lowering import lower
+    from repro.core.program_io import deserialize_program, serialize_program
+    if leader:
+        prog = lower(artifact)
+        if publish is not None:
+            publish(serialize_program(prog))
+        return prog
+    if fetch is None:
+        raise ValueError("follower role requires a fetch callable "
+                         "(the leader's published envelope)")
+    return deserialize_program(fetch(), artifact)
+
+
+def file_publisher(path):
+    """Publish an envelope to a shared-filesystem path, atomically: followers
+    polling the path never observe a partial write."""
+    def publish(blob: bytes) -> None:
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+    return publish
+
+
+def file_fetcher(path, *, timeout_s: float = 30.0, poll_s: float = 0.05):
+    """Fetch the leader's envelope from a shared-filesystem path, polling
+    until the leader publishes or the timeout elapses."""
+    def fetch() -> bytes:
+        deadline = time.monotonic() + timeout_s
+        while not os.path.exists(path):
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"no program envelope at {path!r} after {timeout_s}s — "
+                    f"did the leader publish?")
+            time.sleep(poll_s)
+        with open(path, "rb") as f:
+            return f.read()
+    return fetch

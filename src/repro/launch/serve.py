@@ -2,6 +2,14 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \
         --requests 16 --max-new 12
+
+SNN multi-host mode (lower once per process group): point every process at
+the same exported artifact and a shared envelope path — the leader lowers
+and publishes, followers deserialize and never lower.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --snn-artifact out/mnist.npz --program-envelope /shared/prog.json \
+        --role leader --requests 32
 """
 
 from __future__ import annotations
@@ -17,14 +25,57 @@ from repro.models.model import LM
 from repro.serving.engine import ServeEngine
 
 
+def serve_snn(args) -> None:
+    """The SNN leader/follower path: broadcast the program, then serve."""
+    from repro.core.artifact import Artifact
+    from repro.core.lowering import get_cache
+    from repro.launch.mesh import (broadcast_program, file_fetcher,
+                                   file_publisher)
+    from repro.serving.snn_engine import SNNServeEngine
+
+    art = Artifact.load(args.snn_artifact)
+    publish = fetch = None
+    if args.program_envelope:
+        if args.role == "leader":
+            publish = file_publisher(args.program_envelope)
+        else:
+            fetch = file_fetcher(args.program_envelope,
+                                 timeout_s=args.envelope_timeout)
+    prog = broadcast_program(art, leader=args.role == "leader",
+                             publish=publish, fetch=fetch)
+    engine = SNNServeEngine(art, max_batch=args.max_batch)
+    rng = np.random.RandomState(0)
+    images = rng.rand(args.requests, prog.n_in).astype(np.float32)
+    engine.classify(images)
+    engine.close()
+    cs = get_cache().stats()
+    print(f"[{args.role}] served {args.requests} requests; "
+          f"program {prog.fingerprint[:12]}... "
+          f"(cache: {cs['program_misses']} lowered, "
+          f"{cs['bytes']} bytes resident)")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--snn-artifact",
+                    help="serve an exported SNN artifact instead of an LM")
+    ap.add_argument("--program-envelope",
+                    help="shared path for the serialized program envelope")
+    ap.add_argument("--role", choices=("leader", "follower"),
+                    default="leader")
+    ap.add_argument("--envelope-timeout", type=float, default=30.0)
     args = ap.parse_args()
+
+    if args.snn_artifact:
+        serve_snn(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --snn-artifact is given")
 
     cfg = get_config(args.arch)
     if args.reduced:

@@ -9,8 +9,6 @@ to compile 66 dry-run cells on one CPU core.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Sequence
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,8 +7,6 @@ dry-run.
 """
 
 from __future__ import annotations
-
-import functools
 from typing import NamedTuple
 
 import jax
@@ -52,7 +50,7 @@ def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndar
 # ------------------------------------------------- chunked flash attention
 class _SoftmaxState(NamedTuple):
     m: jnp.ndarray    # (B, H, bq, 1) running max
-    l: jnp.ndarray    # (B, H, bq, 1) running sum
+    lsum: jnp.ndarray  # (B, H, bq, 1) running sum
     acc: jnp.ndarray  # (B, H, bq, D) accumulator
 
 
@@ -120,17 +118,17 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             m_new = jnp.maximum(state.m, jnp.max(s, axis=-1, keepdims=True))
             p = jnp.exp(s - m_new)
             alpha = jnp.exp(state.m - m_new)
-            l_new = state.l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            l_new = state.lsum * alpha + jnp.sum(p, axis=-1, keepdims=True)
             acc_new = state.acc * alpha + jnp.einsum(
                 "bhgqk,bhkd->bhgqd", p, vb.astype(jnp.float32))
             return _SoftmaxState(m_new, l_new, acc_new), None
 
         init = _SoftmaxState(
             m=jnp.full((B, heads, group, bq, 1), NEG_INF, jnp.float32),
-            l=jnp.zeros((B, heads, group, bq, 1), jnp.float32),
+            lsum=jnp.zeros((B, heads, group, bq, 1), jnp.float32),
             acc=jnp.zeros((B, heads, group, bq, D), jnp.float32))
         state, _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
-        out = state.acc / jnp.where(state.l == 0.0, 1.0, state.l)
+        out = state.acc / jnp.where(state.lsum == 0.0, 1.0, state.lsum)
         return out.astype(q.dtype)
 
     if nq == 1:

@@ -164,7 +164,6 @@ def mamba2_decode_step(x_t: jnp.ndarray, p: dict, cfg,
     B = x_t.shape[0]
     H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_d_state, cfg.ssm_n_groups
     d_in = cfg.d_inner
-    K = cfg.ssm_conv
     conv_ch = d_in + 2 * G * N
 
     zxbcdt = x_t[:, 0] @ p["in_proj"]            # (B, ...)

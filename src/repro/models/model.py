@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -224,7 +224,8 @@ class LM:
             q = L.apply_rope(q, positions, c.rope_theta)
             k = L.apply_rope(k, positions, c.rope_theta)
         sp = ("data", None, "model", None)
-        q = self.constrain_mid(q, sp); k = self.constrain_mid(k, sp)
+        q = self.constrain_mid(q, sp)
+        k = self.constrain_mid(k, sp)
         out = L.chunked_attention(
             jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
             causal=causal, window=c.attn_window, gqa=c.attn_gqa_mode)
@@ -278,7 +279,6 @@ class LM:
 
     # ================================================================ forward
     def _embed(self, params, tokens, patch_embeds=None, frame_embeds=None):
-        c = self.cfg
         if frame_embeds is not None:              # audio stub: already embedded
             return frame_embeds
         x = jnp.take(params["embed"], tokens, axis=0)
@@ -456,7 +456,6 @@ class LM:
     def prefill(self, params, tokens, s_max: int, **kw):
         """Run the full forward while building the decode cache (test-scale
         path; production prefill shares forward's chunked attention)."""
-        c = self.cfg
         cache = self.init_cache(tokens.shape[0], s_max,
                                 dtype=params["embed"].dtype, **kw)
         logits = None

@@ -68,7 +68,7 @@ import jax
 import numpy as np
 
 from repro.core.artifact import Artifact
-from repro.core.lowering import LoweredProgram, lower
+from repro.core.lowering import LoweredProgram, get_cache, lower
 from repro.core.runtimes import make_runtime
 from repro.faults.detect import (Canary, ecc_errors, runtime_integrity_errors,
                                  trace_errors)
@@ -297,14 +297,14 @@ class ServingScheduler:
     ``canary_pool=`` supplies held-out images for the golden-canary
     detector (enables canary checks at lane startup/restart)."""
 
-    def __init__(self, artifact: Artifact, *, spec: str = "accelerator-event",
+    def __init__(self, artifact: Artifact | LoweredProgram, *,
+                 spec: str = "accelerator-event",
                  workers: int = 0, max_batch: int = 64,
                  max_wait_us: float = 2000.0, kernel: str | None = None,
                  latency_mode: bool = False, faults=None, resilience=None,
                  canary_pool: np.ndarray | None = None):
         if workers < 0:
             raise ValueError(f"workers must be >= 0, got {workers}")
-        self.art = artifact
         self.spec = spec
         self.family = spec.partition("-")[0]
         self.kernel = kernel
@@ -313,8 +313,11 @@ class ServingScheduler:
         self.workers = int(workers)
         self.latency_mode = bool(latency_mode)
         # lower once; every lane (and watchdog replacement) shares this
-        # program, so rebuilds skip straight to the cached compiled bundle
+        # program, so rebuilds skip straight to the cached compiled bundle.
+        # An already-lowered program passes through (the multi-host follower
+        # path hands the scheduler a deserialized program directly).
         self.program = lower(artifact)
+        self.art = self.program.artifact
         self.n_in = self.program.n_in
         self.plan = FaultPlan.coerce(faults)
         self.resilience = ResilienceConfig.coerce(resilience)
@@ -932,7 +935,7 @@ class ServingScheduler:
             lane.retired = True
             self._transition(lane, "quarantined", "retired from service")
             lanes = getattr(self, "lanes", None)
-            if lanes is not None and all(l.retired for l in lanes) \
+            if lanes is not None and all(ln.retired for ln in lanes) \
                     and getattr(self, "_threads", None):
                 self._all_quarantined = True
                 now = time.perf_counter()
@@ -1055,7 +1058,8 @@ class ServingScheduler:
         n = int(snap.get("images_out", 0))
         # ONE denominator guard for every per-image rate (board and
         # accelerator branches used to disagree: `if n` vs `max(1, n)`)
-        per_image = lambda x: x / n if n else 0.0
+        def per_image(x):
+            return x / n if n else 0.0
         accel_s = float(snap.get("accel_s", 0.0))
         system_s = float(snap.get("system_s", 0.0))
         batches = int(snap.get("batches", 0))
@@ -1102,6 +1106,12 @@ class ServingScheduler:
             "events_total": int(snap.get("events_total", 0)),
             "events_dropped": int(snap.get("events_dropped", 0)),
         }
+        # program-cache residency for the process this scheduler runs in —
+        # an ops view: growing evictions under steady traffic means the
+        # byte budget is thrashing live programs
+        cache_stats = get_cache().stats()
+        st["program_cache_bytes"] = int(cache_stats["bytes"])
+        st["program_cache_evictions"] = int(cache_stats["evictions"])
         if self.family == "board":
             board_cycles = int(snap.get("board_cycles", 0))
             cost = getattr(self.lanes[0].runtime, "cost", None)

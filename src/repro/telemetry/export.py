@@ -14,6 +14,13 @@ endpoint or a textfile collector:
     curl localhost:9000/metrics     # if served
     repro_lane_faults 3
     repro_request_latency_us_bucket{le="500.0"} 117
+
+``program_cache_text()`` projects the active ``ProgramCache`` — residency,
+byte gauge, eviction and hit/miss counters — through the same renderer, so
+the LRU budget is scrapeable next to the serving metrics:
+
+    repro_program_cache_bytes 33629
+    repro_program_cache_evictions 2
 """
 
 from __future__ import annotations
@@ -95,3 +102,20 @@ def prometheus_text(registry: MetricsRegistry, prefix: str = "repro") -> str:
         lines.append(f"{n}_sum {_fmt(h.sum)}")
         lines.append(f"{n}_count {h.count}")
     return "\n".join(lines) + "\n"
+
+
+def program_cache_text(cache=None, prefix: str = "repro") -> str:
+    """Prometheus exposition for a ``ProgramCache`` (default: the active
+    one). Monotonic totals render as counters, residency as gauges."""
+    from repro.core.lowering import get_cache
+    st = (cache if cache is not None else get_cache()).stats()
+    reg = MetricsRegistry()
+    for name in ("evictions", "program_hits", "program_misses",
+                 "bundle_hits", "bundle_misses"):
+        reg.inc(f"program_cache_{name}", st[name])
+    reg.set_gauge("program_cache_bytes", st["bytes"])
+    reg.set_gauge("program_cache_programs", st["programs"])
+    reg.set_gauge("program_cache_bundles", st["bundles"])
+    if st["max_bytes"] is not None:
+        reg.set_gauge("program_cache_max_bytes", st["max_bytes"])
+    return prometheus_text(reg, prefix)

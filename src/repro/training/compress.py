@@ -39,7 +39,8 @@ def compress(grads, residual) -> tuple[Compressed, Any]:
         return q, scale, new_r
 
     out = jax.tree.map(per, grads, residual)
-    istup = lambda x: isinstance(x, tuple)
+    def istup(x):
+        return isinstance(x, tuple)
     q = jax.tree.map(lambda o: o[0], out, is_leaf=istup)
     s = jax.tree.map(lambda o: o[1], out, is_leaf=istup)
     new_r = jax.tree.map(lambda o: o[2], out, is_leaf=istup)

@@ -12,8 +12,7 @@ Distributed-optimization tricks baked in:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ AdamW's 8 bytes/param does not fit single-pod HBM at 235B/398B scale.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

@@ -44,7 +44,7 @@ def test_token_pipeline_labels_are_shifted_tokens():
     b = TokenPipeline(cfg).host_batch(0, 0)
     assert b["tokens"].shape == b["labels"].shape == (2, 16)
     # autoregressive alignment: labels[t] continues tokens[t]
-    full = TokenPipeline(cfg)._host_rng(0, 0)  # smoke: rng accessible
+    TokenPipeline(cfg)._host_rng(0, 0)  # smoke: rng accessible
     assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
 
 

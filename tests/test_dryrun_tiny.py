@@ -81,7 +81,8 @@ def test_dryrun_pipeline_tiny_mesh():
     proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                           capture_output=True, text=True, timeout=560)
     assert proc.returncode == 0, proc.stderr[-3000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
     out = json.loads(line[len("RESULT "):])
     # train cell compiled, produced collectives, fits in (tiny) memory
     assert out["train"]["flops"] > 0

@@ -1,6 +1,5 @@
 """Elastic scaling + straggler mitigation logic."""
 
-import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.training.elastic import (StragglerMonitor, rebalance,

@@ -131,7 +131,8 @@ def test_faulty_aer_queue_drop_dup_reorder(fuzz0):
     # reorder preserves the event multiset, only displaces across tick edges
     assert reorder.total_events == clean.total_events
     assert reorder.injected_moves > 0
-    ids = lambda q: sorted(int(i) for t in range(T) for i in q.events_at(t))
+    def ids(q):
+        return sorted(int(i) for t in range(T) for i in q.events_at(t))
     assert ids(reorder) == ids(clean)
     # determinism: the same (plan, image_key) perturbs identically
     drop2 = FaultyAEREventQueue(row, T, depth,

@@ -16,8 +16,6 @@ from repro.core.lif_dynamics import lif_scan, lif_scan_early_exit
 from repro.core.reference import SNNReference
 from repro.kernels.event_accum.ref import event_accum_ref
 from repro.kernels.fused_event_lif import ops as fused
-from repro.kernels.fused_event_lif.ref import (
-    fused_event_lif_early_exit_ref, fused_event_lif_ref)
 
 
 def _random_case(rng, B, T, N_in, N, e_max=None):

@@ -1,7 +1,6 @@
 """Per-kernel validation: shape/dtype sweeps + hypothesis, each Pallas kernel
 (interpret mode) against its pure-jnp ref.py oracle."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

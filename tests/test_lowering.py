@@ -22,13 +22,15 @@ import ast
 import copy
 import os
 import re
+import threading
 
 import numpy as np
 import pytest
 
 from repro.core.artifact import Artifact
 from repro.core.lowering import (LoweredProgram, LoweringError, PROGRAM_CACHE,
-                                 lower, lower_with_faults)
+                                 ProgramCache, get_cache, install, lower,
+                                 lower_with_faults, program_nbytes)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
 
@@ -188,6 +190,237 @@ def test_distinct_artifacts_get_distinct_programs(trained_artifact):
     assert pa is not pc
     assert pa.fingerprint != pc.fingerprint
     assert pc.e_max == pa.e_max + 1
+
+
+# ------------------------------------------------- cache poisoning (bugfix)
+def test_host_arrays_cannot_poison_the_cached_program(trained_artifact):
+    """Regression: ``host_arrays()`` used to hand out the live artifact dict;
+    an in-place caller mutation silently corrupted every later cache hit
+    without changing the fingerprint key."""
+    art, _, _ = trained_artifact
+    prog = lower(art)
+    snapshot = {k: v.copy() for k, v in prog.artifact.arrays.items()}
+    ha = prog.host_arrays()
+    # in-place writes through the returned views must be refused...
+    for name, arr in ha.items():
+        with pytest.raises(ValueError):
+            arr[(0,) * arr.ndim] = 1
+    # ...and replacing dict entries must not reach the cached program
+    ha["w_float"] = np.zeros_like(snapshot["w_float"])
+    hit = lower(art)
+    assert hit is prog
+    for k, v in hit.artifact.arrays.items():
+        assert v.tobytes() == snapshot[k].tobytes(), f"{k} was poisoned"
+
+
+# -------------------------------------------------- racing miss accounting
+def test_racing_program_lowers_count_one_miss(trained_artifact, monkeypatch):
+    """Two threads racing ``program()`` on the same key: only the thread
+    whose object was installed counts a miss (the loser's build is
+    discarded), so misses == distinct builds kept."""
+    import repro.core.lowering as lowering_mod
+    art, _, _ = trained_artifact
+    cache = ProgramCache()
+    barrier = threading.Barrier(2, timeout=10)
+    real = lowering_mod._lower_uncached
+
+    def slow_lower(a):
+        barrier.wait()   # both threads are past the lookup, mid-lower
+        return real(a)
+
+    monkeypatch.setattr(lowering_mod, "_lower_uncached", slow_lower)
+    results: list = []
+
+    def run():
+        results.append(cache.program(art))
+
+    threads = [threading.Thread(target=run) for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    st = cache.stats()
+    assert st["program_misses"] == 1
+    assert st["program_hits"] == 1
+    assert st["programs"] == 1
+    assert results[0][0] is results[1][0]
+    # exactly one thread saw a miss
+    assert sorted(hit for _, hit in results) == [False, True]
+
+
+def test_racing_bundle_builds_count_one_miss():
+    cache = ProgramCache()
+    barrier = threading.Barrier(2, timeout=10)
+
+    def build():
+        barrier.wait()
+        return object()
+
+    results: list = []
+    threads = [threading.Thread(
+        target=lambda: results.append(cache.bundle(("fam", "fp"), build)))
+        for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    st = cache.stats()
+    assert st["bundle_misses"] == 1
+    assert st["bundle_hits"] == 1
+    assert results[0][0] is results[1][0]
+
+
+# ----------------------------------------------------- positivity (bugfix)
+@pytest.mark.parametrize("section,key,pattern", [
+    ("events", "e_max", r"events\.e_max"),
+    ("readout", "per_group", r"readout\.per_group"),
+    ("codesign", "lane", r"codesign\.lane"),
+    ("quant", "scale", r"quant\.scale"),
+])
+@pytest.mark.parametrize("bad", [0, -1])
+def test_non_positive_meta_rejected_at_lowering(trained_artifact, section,
+                                                key, bad, pattern):
+    """Regression: non-positive e_max/per_group/lane/scale used to survive
+    lowering and fail later inside jitted code with shape/NaN errors."""
+    art, _, _ = trained_artifact
+    c = _clone(art)
+    c.meta[section][key] = type(c.meta[section][key])(bad)
+    with pytest.raises(LoweringError, match=pattern):
+        lower(c, cache=False)
+
+
+# ------------------------------------------------------- LRU byte budget
+def _variants(art, n):
+    """n distinct-fingerprint artifacts sharing the same arrays (equal
+    program byte sizes — convenient for budget math)."""
+    out = []
+    for i in range(n):
+        c = _clone(art)
+        c.meta["events"]["e_max"] = int(c.meta["events"]["e_max"]) + 1 + i
+        out.append(c)
+    return out
+
+
+def test_lru_byte_accounting_matches_sum_nbytes(trained_artifact):
+    art, _, _ = trained_artifact
+    cache = ProgramCache()
+    prev = install(cache)
+    try:
+        progs = [lower(v) for v in _variants(art, 3)]
+    finally:
+        install(prev)
+    assert cache.stats()["bytes"] == sum(program_nbytes(p) for p in progs)
+    for p in progs:
+        assert program_nbytes(p) == sum(
+            int(getattr(p, n).nbytes)
+            for n in ("w_float", "w_int8", "thresholds", "w_padded",
+                      "thr_padded"))
+
+
+def test_lru_evicts_cold_end_and_hits_refresh_recency(trained_artifact):
+    art, _, _ = trained_artifact
+    a, b, c = _variants(art, 3)
+    per = program_nbytes(lower(art, cache=False))
+    cache = ProgramCache(max_bytes=2 * per)   # room for 2 of 3
+    prev = install(cache)
+    try:
+        prog_a = lower(a)
+        lower(b)
+        assert lower(a) is prog_a   # hit refreshes a's recency -> b is LRU
+        lower(c)                    # evicts b, NOT a
+        st = cache.stats()
+        assert st["evictions"] == 1
+        assert st["programs"] == 2
+        assert st["bytes"] == 2 * per
+        misses = st["program_misses"]
+        assert lower(a) is prog_a               # still resident
+        assert cache.stats()["program_misses"] == misses
+        lower(b)                                # evicted: fresh miss
+        assert cache.stats()["program_misses"] == misses + 1
+    finally:
+        install(prev)
+
+
+def test_bundles_die_with_their_program(trained_artifact):
+    art, _, _ = trained_artifact
+    a, b = _variants(art, 2)
+    per = program_nbytes(lower(art, cache=False))
+    cache = ProgramCache(max_bytes=per)       # room for exactly 1
+    prev = install(cache)
+    try:
+        prog_a = lower(a)
+        sentinel = object()
+        cache.bundle(("fam", prog_a.fingerprint, "cfg"), lambda: sentinel)
+        keep = object()
+        cache.bundle(("fam", "unrelated-fp", "cfg"), lambda: keep)
+        assert cache.stats()["bundles"] == 2
+        lower(b)                              # evicts prog_a + its bundle
+        st = cache.stats()
+        assert st["evictions"] == 1
+        assert st["bundles"] == 1
+        # the survivor is the unrelated bundle; prog_a's must rebuild
+        got, hit = cache.bundle(("fam", "unrelated-fp", "cfg"),
+                                lambda: object())
+        assert got is keep and hit is True
+        rebuilt, hit = cache.bundle(("fam", prog_a.fingerprint, "cfg"),
+                                    lambda: object())
+        assert rebuilt is not sentinel and hit is False
+    finally:
+        install(prev)
+
+
+def test_cache_stats_and_prometheus_surface_lru_fields(trained_artifact):
+    from repro.telemetry.export import program_cache_text
+    art, _, _ = trained_artifact
+    a, b = _variants(art, 2)
+    per = program_nbytes(lower(art, cache=False))
+    cache = ProgramCache(max_bytes=per)
+    prev = install(cache)
+    try:
+        lower(a)
+        lower(b)
+    finally:
+        install(prev)
+    st = cache.stats()
+    assert st["evictions"] == 1
+    assert st["bytes"] == per
+    assert st["max_bytes"] == per
+    text = program_cache_text(cache)
+    assert "repro_program_cache_evictions 1" in text
+    assert f"repro_program_cache_bytes {per}" in text
+    assert f"repro_program_cache_max_bytes {per}" in text
+    assert "# TYPE repro_program_cache_evictions counter" in text
+    assert "# TYPE repro_program_cache_bytes gauge" in text
+
+
+def test_install_scopes_cache_churn_away_from_the_singleton(trained_artifact):
+    art, _, _ = trained_artifact
+    resident = lower(art)                     # lives in the default cache
+    scoped = ProgramCache()
+    prev = install(scoped)
+    try:
+        assert get_cache() is scoped
+        inside = lower(art)
+        assert inside is not resident         # scoped cache lowered its own
+        scoped.clear()                        # churn: invisible outside
+    finally:
+        install(prev)
+    assert get_cache() is PROGRAM_CACHE
+    assert lower(art) is resident             # singleton entry untouched
+    # runtime.build span meta projects the ACTIVE cache's byte/eviction state
+    from repro.core.runtimes import make_runtime
+    from repro.telemetry.trace import Tracer
+    from repro.telemetry.trace import install as trace_install
+    tr = Tracer()
+    trace_install(tr)
+    try:
+        make_runtime(art, "reference")
+    finally:
+        trace_install(None)
+    builds = [s for s in tr.spans if s.name == "runtime.build"]
+    assert builds
+    assert builds[-1].meta.get("cache_bytes") == PROGRAM_CACHE.stats()["bytes"]
+    assert "cache_evictions" in builds[-1].meta
 
 
 # -------------------------------------------------------- hygiene: imports

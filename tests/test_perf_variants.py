@@ -1,7 +1,6 @@
 """Correctness of §Perf optimization paths: every variant must compute the
 same function as its baseline (optimizations may not change semantics)."""
 
-import json
 import os
 import subprocess
 import sys

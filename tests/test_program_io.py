@@ -1,0 +1,190 @@
+"""Cross-process program distribution: serialize/deserialize + broadcast.
+
+The envelope is the multi-host companion to the lowering stage: the leader
+lowers once, every follower reconstructs the program from (envelope, local
+artifact) without ever calling ``_lower_uncached``. These tests pin the
+roundtrip's bit-exactness, every rejection path (wrong artifact, tampered
+scalars/hashes, dropped keys, truncation — via the conformance envelope
+mutator), cache seeding, and the leader/follower broadcast hook over both
+an in-memory and the shared-file transport.
+"""
+
+import copy
+import threading
+
+import numpy as np
+import pytest
+
+from repro.conformance.fuzz import fuzz_case, fuzz_envelope_mutations
+from repro.core.artifact import Artifact
+from repro.core.lowering import ProgramCache, install, lower
+from repro.core.program_io import (ProgramIOError, deserialize_program,
+                                   serialize_program)
+from repro.launch.mesh import (broadcast_program, file_fetcher,
+                               file_publisher)
+
+ARRAYS = ("w_float", "w_int8", "thresholds", "w_padded", "thr_padded")
+
+
+def _clone(art: Artifact) -> Artifact:
+    return Artifact(copy.deepcopy(art.meta), dict(art.arrays))
+
+
+@pytest.fixture()
+def scoped_cache():
+    cache = ProgramCache()
+    prev = install(cache)
+    yield cache
+    install(prev)
+
+
+# ------------------------------------------------------------- roundtrip
+def test_roundtrip_is_bit_identical_to_fresh_lower(trained_artifact):
+    art, _, _ = trained_artifact
+    fresh = lower(art, cache=False)
+    blob = serialize_program(fresh)
+    rt = deserialize_program(blob, art, cache=False)
+    assert rt.fingerprint == fresh.fingerprint
+    for f in ("T", "x_min", "e_max", "leak_shift", "n_in", "n_out",
+              "n_groups", "per_group", "fallback", "scale", "n_pad", "lane"):
+        assert getattr(rt, f) == getattr(fresh, f), f
+    assert rt.encode == fresh.encode
+    assert rt.decode == fresh.decode
+    for name in ARRAYS:
+        a, b = np.asarray(getattr(rt, name)), np.asarray(getattr(fresh, name))
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+    # canonical: serializing the reconstruction reproduces the exact bytes
+    assert serialize_program(rt) == blob
+
+
+def test_roundtrip_across_fuzzed_artifacts():
+    for seed in (0, 3, 7):
+        art = fuzz_case(seed).artifact
+        fresh = lower(art, cache=False)
+        rt = deserialize_program(serialize_program(fresh), art, cache=False)
+        assert rt.fingerprint == fresh.fingerprint, f"seed {seed}"
+
+
+def test_serialize_rejects_non_program():
+    with pytest.raises(TypeError):
+        serialize_program({"not": "a program"})
+    with pytest.raises(TypeError):
+        deserialize_program(b"{}", {"not": "an artifact"})
+
+
+# ------------------------------------------------------------- rejection
+def test_wrong_artifact_rejected(trained_artifact):
+    art, _, _ = trained_artifact
+    blob = serialize_program(lower(art, cache=False))
+    other = _clone(art)
+    other.meta["events"]["e_max"] = int(other.meta["events"]["e_max"]) + 1
+    with pytest.raises(ProgramIOError, match="artifact fingerprint"):
+        deserialize_program(blob, other, cache=False)
+
+
+def test_every_envelope_mutation_is_rejected(trained_artifact):
+    art, _, _ = trained_artifact
+    blob = serialize_program(lower(art, cache=False))
+    muts = fuzz_envelope_mutations(blob, seed=5)
+    assert len(muts) == 5
+    for desc, bad in muts:
+        with pytest.raises(ProgramIOError):
+            deserialize_program(bad, art, cache=False)
+        # and none of them half-applied anything: the pristine blob still works
+    assert deserialize_program(blob, art,
+                               cache=False).fingerprint \
+        == lower(art, cache=False).fingerprint
+
+
+def test_tampered_array_hash_names_the_array(trained_artifact):
+    import json
+    art, _, _ = trained_artifact
+    env = json.loads(serialize_program(lower(art, cache=False)))
+    digest = env["arrays"]["w_padded"]
+    env["arrays"]["w_padded"] = ("0" if digest[0] != "0" else "1") + digest[1:]
+    bad = json.dumps(env, sort_keys=True, separators=(",", ":")).encode()
+    with pytest.raises(ProgramIOError, match="w_padded"):
+        deserialize_program(bad, art, cache=False)
+
+
+# ---------------------------------------------------------- cache seeding
+def test_deserialize_seeds_the_active_cache(trained_artifact, scoped_cache):
+    art, _, _ = trained_artifact
+    blob = serialize_program(lower(art, cache=False))
+    prog = deserialize_program(blob, art)
+    st = scoped_cache.stats()
+    assert st["programs"] == 1
+    # a later lower() on this host is a pure cache hit — no lowering
+    assert lower(art) is prog
+    assert scoped_cache.stats()["program_misses"] == st["program_misses"]
+
+
+def test_seed_first_installer_wins(trained_artifact, scoped_cache):
+    art, _, _ = trained_artifact
+    resident = lower(art)                     # installed by lowering
+    blob = serialize_program(resident)
+    seeded = deserialize_program(blob, art)   # seed finds the resident entry
+    assert seeded is resident
+
+
+# ------------------------------------------------------------- broadcast
+def test_broadcast_leader_publishes_follower_never_lowers(
+        trained_artifact, scoped_cache, monkeypatch):
+    import repro.core.lowering as lowering_mod
+    art, _, _ = trained_artifact
+    box: dict = {}
+    leader_prog = broadcast_program(art, leader=True,
+                                    publish=lambda b: box.update(blob=b))
+    assert box["blob"]
+
+    # follower: a pristine cache AND a lowering stage that refuses to run —
+    # deserialization must be the only path to a program
+    follower_cache = ProgramCache()
+    prev = install(follower_cache)
+
+    def explode(a):
+        raise AssertionError("follower called _lower_uncached")
+
+    monkeypatch.setattr(lowering_mod, "_lower_uncached", explode)
+    try:
+        follower_prog = broadcast_program(art, leader=False,
+                                          fetch=lambda: box["blob"])
+    finally:
+        install(prev)
+    assert follower_prog.fingerprint == leader_prog.fingerprint
+    assert follower_cache.stats()["programs"] == 1
+
+
+def test_broadcast_follower_requires_fetch(trained_artifact):
+    art, _, _ = trained_artifact
+    with pytest.raises(ValueError, match="fetch"):
+        broadcast_program(art, leader=False)
+
+
+def test_broadcast_over_shared_file(trained_artifact, scoped_cache, tmp_path):
+    art, _, _ = trained_artifact
+    path = str(tmp_path / "program.envelope.json")
+
+    # follower starts FIRST and polls; the leader publishes concurrently —
+    # the file transport must hand the follower a complete envelope
+    result: dict = {}
+
+    def follower():
+        fetch = file_fetcher(path, timeout_s=10.0, poll_s=0.005)
+        result["prog"] = broadcast_program(art, leader=False, fetch=fetch)
+
+    t = threading.Thread(target=follower)
+    t.start()
+    leader_prog = broadcast_program(art, leader=True,
+                                    publish=file_publisher(path))
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert result["prog"].fingerprint == leader_prog.fingerprint
+
+
+def test_file_fetcher_times_out(tmp_path):
+    fetch = file_fetcher(str(tmp_path / "never.json"), timeout_s=0.05,
+                         poll_s=0.01)
+    with pytest.raises(TimeoutError, match="leader"):
+        fetch()

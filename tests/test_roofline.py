@@ -1,8 +1,6 @@
 """Roofline machinery: HLO collective parsing with while-trip scaling, and
 the analytic cost model's sanity."""
 
-import numpy as np
-
 from repro.configs.registry import get_config
 from repro.configs.shapes import SHAPES
 from repro.distributed import analytic as AN

@@ -45,7 +45,6 @@ def test_param_rules_cover_all_archs():
     """Every param of every full config gets a legal spec (no exceptions) and
     big 2D+ params always get at least one sharded dim on the single mesh."""
     import jax
-    import jax.numpy as jnp
     from repro.configs.registry import ALIASES, get_config
     from repro.models.model import LM
     for arch in ALIASES:

@@ -49,7 +49,8 @@ def test_optimizers_reduce_quadratic_loss():
         opt = O.get(name, lr)
         params = {"x": jnp.asarray([3.0, -2.0], jnp.float32)}
         state = opt.init(params)
-        loss = lambda p: jnp.sum(p["x"] ** 2)
+        def loss(p):
+            return jnp.sum(p["x"] ** 2)
         start = float(loss(params))
         for _ in range(steps):
             g = jax.grad(loss)(params)

@@ -17,7 +17,6 @@ def test_encode_brighter_is_earlier():
 def test_encode_range_and_sentinel():
     x = jnp.asarray(np.linspace(0, 1, 100)[None])
     t = np.asarray(ttfs.encode_ttfs(x, T=16))
-    live = t[x > 0] if np.any(np.asarray(x) > 0) else t
     assert t.min() >= 0 and t.max() <= 16
     assert np.all(t[np.asarray(x) >= 1 / 255] <= 15)
 
