@@ -16,7 +16,14 @@ engine sharing the process:
     process-state build (fresh scoped cache — fresh bundle closures force
     real recompilation) vs a cached rebuild. ``--check`` gates cached >= 3x
     faster than cold for every jitted spec (board-py builds no jitted
-    bundle and is reported ungated).
+    bundle and is reported ungated). Each row also records the ABSOLUTE
+    cold-compile latency (``cold_compile_ms`` = cold − cached, the
+    jit-trace/XLA-compile share) against a soft budget
+    (``REPRO_COLD_BUILD_BUDGET_MS``, default 30 s): a watchdog replacement
+    lane racing a 30 s compile is a serving incident even when the ratio
+    gate passes, so ``--check`` WARNS (never fails) on budget breaches —
+    the ratio gate stays the hard contract until kernel growth stabilizes
+    the absolute numbers.
   * the watchdog scenario end-to-end: a one-lane scheduler whose lane hangs
     on its first batch; the replacement lane's ``runtime.build`` span must
     record ``cache_hit`` in its meta, proving lane recovery rides the cache.
@@ -36,6 +43,7 @@ from __future__ import annotations
 
 import argparse
 import copy
+import os
 import sys
 import time
 
@@ -54,6 +62,9 @@ SPECS = ("reference", "accelerator-batch", "accelerator-event",
          "accelerator-event-fused", "board-batched", "board-py")
 UNGATED = {"board-py"}
 GATE_SPEEDUP = 3.0
+#: soft absolute budget for a cold build's compile share (ms) — breaches
+#: warn, never fail (ROADMAP: harden once kernel depth stabilizes)
+COLD_BUDGET_MS = float(os.environ.get("REPRO_COLD_BUILD_BUDGET_MS", 30000.0))
 
 
 def _build_and_serve_ms(art, spec: str, images: np.ndarray) -> float:
@@ -193,6 +204,11 @@ def main(quick: bool = False, check: bool = False) -> int:
                               "clock)",
                      "cold_build_ms": cold_ms,
                      "cached_build_ms": cached_ms,
+                     # the compile share a replacement lane would pay cold:
+                     # everything the cached rebuild does NOT repeat
+                     "cold_compile_ms": max(0.0, cold_ms - cached_ms),
+                     "cold_budget_ms": COLD_BUDGET_MS,
+                     "within_cold_budget": cold_ms <= COLD_BUDGET_MS,
                      "speedup": speedup,
                      "gated": spec not in UNGATED})
         gate = "" if spec in UNGATED else f"  (gate >= {GATE_SPEEDUP}x)"
@@ -256,6 +272,17 @@ def main(quick: bool = False, check: bool = False) -> int:
         if not ev["victim_remissed"]:
             bad.append("re-lowering the LRU victim did not miss — the "
                        "eviction was not real")
+        # soft absolute-latency budget: warn loudly, never fail — the
+        # ratio gate above is the hard contract (ROADMAP item: make this
+        # hard once fused-kernel depth stabilizes cold-compile numbers)
+        over = [r for r in rows
+                if "cold_build_ms" in r and not r.get("within_cold_budget",
+                                                      True)]
+        for r in over:
+            print(f"BUDGET WARNING: {r.get('runtime') or r.get('config')} "
+                  f"cold build {r['cold_build_ms']:.0f} ms exceeds the "
+                  f"{COLD_BUDGET_MS:.0f} ms soft budget "
+                  f"(REPRO_COLD_BUILD_BUDGET_MS)", file=sys.stderr)
         if bad:
             print("CHECK FAILED: " + "; ".join(bad), file=sys.stderr)
             return 1

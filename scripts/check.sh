@@ -19,7 +19,10 @@
 # more than its budget (disabled < 2%, enabled < 10% — overhead gate), OR
 # if the program cache stops paying (cached runtime builds must be >= 3x
 # faster than cold and the watchdog's replacement lane must be a cache
-# hit — runtime-build gate).
+# hit — runtime-build gate), OR if the TCP program-distribution transport
+# violates detected-or-bit-exact on any fault-proxy scenario / a
+# two-process leader/follower pair drifts from the software reference
+# (transport gate).
 #
 # The serving and chaos gates run with --trace-out so any failing scenario
 # leaves its telemetry span tree (JSONL) next to the JSON failure report.
@@ -53,3 +56,5 @@ python -m benchmarks.bench_fault_tolerance --quick --check \
     --trace-out results/fault_failures
 python -m benchmarks.bench_telemetry_overhead --quick --check
 python -m benchmarks.bench_runtime_build --quick --check
+python -m benchmarks.bench_transport --quick --check \
+    --failures-out results/transport_failures

@@ -35,7 +35,8 @@ from repro.core import ttfs
 from repro.core.artifact import Artifact
 from repro.core.events import step_counts
 from repro.core.hw import BoardCostModel, PYNQ_COST
-from repro.core.lowering import LoweredProgram, get_cache, lower
+from repro.core.lowering import (LoweredProgram, get_cache, lower,
+                                 program_nbytes)
 from repro.core.types import SNNOutput, decode_output
 from repro.telemetry import trace as ttrace
 
@@ -136,7 +137,8 @@ class SNNBoardBatched:
         self._core, self.cache_hit = get_cache().bundle(
             ("board-batched", prog.fingerprint, kernel,
              self.latency_mode, cost),
-            lambda: _build_core(prog, kernel, self.latency_mode, cost))
+            lambda: _build_core(prog, kernel, self.latency_mode, cost),
+            nbytes=program_nbytes(prog))
         self.last_trace: BoardTrace | None = None
         # per-forward (B, T) dispatch histogram — the trace detector's input
         self.last_tick_counts: np.ndarray | None = None

@@ -18,15 +18,26 @@ valid artifact*:
     quantization error bounds);
   * ``golden``  — pinned-seed golden traces under ``tests/golden/`` with a
     regeneration CLI, so reference-semantics drift is caught even when every
-    runtime drifts together.
+    runtime drifts together;
+  * ``transport_faults`` — a fault-injecting TCP proxy (truncations, flipped
+    bytes, re-framed tampering, stale replays, resets, stalls, slow-loris)
+    behind the ``transport`` oracle's *detected-or-bit-exact* invariant:
+    a fetched program either fails loudly naming the corruption or is
+    fingerprint-identical to the leader's.
 
-``benchmarks/bench_conformance.py --check`` is the gate wired into
+``benchmarks/bench_conformance.py --check`` and
+``benchmarks/bench_transport.py --check`` are the gates wired into
 ``scripts/check.sh`` and CI.
 """
 
 from repro.conformance.fuzz import FuzzedCase, fuzz_case, images_from_times
 from repro.conformance.oracles import ConformanceReport, OracleOutcome, run_case
+from repro.conformance.transport_faults import (SCENARIOS, FaultyProxy,
+                                                Scenario, run_scenario,
+                                                run_suite)
 from repro.conformance import golden
 
 __all__ = ["FuzzedCase", "fuzz_case", "images_from_times",
-           "ConformanceReport", "OracleOutcome", "run_case", "golden"]
+           "ConformanceReport", "OracleOutcome", "run_case", "golden",
+           "SCENARIOS", "FaultyProxy", "Scenario", "run_scenario",
+           "run_suite"]

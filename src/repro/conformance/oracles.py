@@ -154,6 +154,9 @@ def run_case(case: FuzzedCase, specs=ADVERTISED_SPECS,
     # ---- program-io: the serialized envelope reconstructs bit-identically
     outcomes.append(_program_io_oracle(art))
 
+    # ---- transport: detected-or-bit-exact under packet-level faults ------
+    outcomes.append(_transport_oracle(art, case.seed))
+
     # ---- differential: every advertised spec vs the reference ------------
     ref_rt = make_runtime(art, "reference")
     out_ref = ref_rt.forward(images)
@@ -357,6 +360,39 @@ def _program_io_oracle(art) -> OracleOutcome:
         pass
     return OracleOutcome("program-io", "*", not errs, "; ".join(errs),
                          {"envelope_bytes": len(blob)})
+
+
+def _transport_oracle(art, seed: int) -> OracleOutcome:
+    """Transport conformance: *detected-or-bit-exact* under packet faults.
+
+    Runs a seed-rotated window of the fault-proxy scenarios (real sockets,
+    real fetcher, this case's real envelope) — every fetch must either fail
+    with a typed error naming the corruption or reconstruct a program
+    fingerprint-identical to the leader's. The full scenario sweep is
+    ``bench_transport.py --check``'s job; the per-case window here means the
+    fuzzed-artifact population collectively covers every scenario while one
+    case stays cheap."""
+    from repro.conformance.transport_faults import SCENARIOS, run_suite
+    from repro.core.lowering import lower
+    from repro.core.program_io import serialize_program
+
+    prog = lower(art)
+    blob = serialize_program(prog)
+    # stale-replay needs a second artifact's envelope; the bench covers it
+    pool = [sc for sc in SCENARIOS if sc.kind != "stale"]
+    start = seed % len(pool)
+    window = tuple(pool[(start + j) % len(pool)] for j in range(4))
+    verdicts = run_suite(blob, art, prog.fingerprint,
+                         scenarios=window, seed=seed)
+    bad = [v for v in verdicts if not v["ok"]]
+    detail = "; ".join(
+        f"{v['scenario']}: expected {v['expect']}, got {v['outcome']} "
+        f"({v['detail']})" for v in bad)
+    return OracleOutcome(
+        "transport", "*", not bad, detail,
+        {"scenarios": len(verdicts),
+         "detected": sum(v["outcome"] == "detected" for v in verdicts),
+         "bitexact": sum(v["outcome"] == "bitexact" for v in verdicts)})
 
 
 def _telemetry_oracle(case: FuzzedCase, py_slice: int) -> OracleOutcome:

@@ -40,7 +40,8 @@ from repro.core import ttfs
 from repro.core.artifact import Artifact
 from repro.core.events import EventFrames, PAD, pack_events_batched
 from repro.core.lif_dynamics import lif_scan, lif_scan_early_exit
-from repro.core.lowering import LoweredProgram, get_cache, lower
+from repro.core.lowering import (LoweredProgram, get_cache, lower,
+                                 program_nbytes)
 from repro.core.types import SNNOutput, decode_output
 from repro.telemetry import trace as ttrace
 
@@ -172,7 +173,8 @@ class SNNAccelerator:
         self.thr_padded = prog.thr_padded      # (N_pad,) int32
         bundle, self.cache_hit = get_cache().bundle(
             ("accelerator", prog.fingerprint, mode, kernel),
-            lambda: _build_bundle(prog, mode, kernel))
+            lambda: _build_bundle(prog, mode, kernel),
+            nbytes=program_nbytes(prog))
         if mode == "batch":
             self._fwd_batch = bundle["batch"]
         else:

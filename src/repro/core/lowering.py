@@ -263,12 +263,26 @@ class ProgramCache:
     the cold end, and every bundle whose key carries the victim's program
     fingerprint (index 1 by convention) is dropped with it — a compiled
     callable over an evicted program would otherwise pin its device arrays
-    forever through the closure."""
+    forever through the closure.
+
+    Bundles built over programs that were never cached (cache-bypassing
+    ``lower(..., cache=False)`` callers that then build runtimes) pin those
+    programs' device arrays through their closures all the same, so their
+    bytes are charged to the SAME budget as an **orphan** entry keyed by the
+    program fingerprint: one charge per distinct orphan program no matter
+    how many bundles share it, refreshed on bundle hits, evicted (with its
+    bundles) before any resident program — orphans are the least-trusted
+    tier since nothing else can re-reach them by artifact fingerprint. If
+    the program is later properly installed, the orphan charge merges into
+    the resident charge (no double count) and its bundles co-evict with the
+    program from then on."""
 
     def __init__(self, max_bytes: int | None = DEFAULT_MAX_BYTES):
         self._lock = threading.Lock()
         self._programs: OrderedDict[str, LoweredProgram] = OrderedDict()
         self._bundles: dict[tuple, Any] = {}
+        #: program fingerprint → charged bytes, for bundle-only residents
+        self._orphans: OrderedDict[str, int] = OrderedDict()
         self.max_bytes = max_bytes
         self.bytes = 0
         self.evictions = 0
@@ -284,23 +298,36 @@ class ProgramCache:
         if existing is not None:
             self._programs.move_to_end(key)
             return existing, False
+        orphaned = self._orphans.pop(prog.fingerprint, None)
+        if orphaned is not None:
+            # the program's bytes were already charged via its bundles;
+            # fold the orphan charge into the resident charge
+            self.bytes -= orphaned
         self._programs[key] = prog
         self.bytes += program_nbytes(prog)
         self._evict_locked()
         return prog, True
 
+    def _drop_bundles_locked(self, prog_fp: str) -> None:
+        dead = [k for k in self._bundles
+                if len(k) > 1 and k[1] == prog_fp]
+        for k in dead:
+            del self._bundles[k]
+
     def _evict_locked(self) -> None:
         if self.max_bytes is None:
             return
+        while self.bytes > self.max_bytes and self._orphans:
+            fp, nbytes = self._orphans.popitem(last=False)
+            self.bytes -= nbytes
+            self.evictions += 1
+            self._drop_bundles_locked(fp)
         while self.bytes > self.max_bytes and len(self._programs) > 1:
             victim_key, victim = next(iter(self._programs.items()))
             del self._programs[victim_key]
             self.bytes -= program_nbytes(victim)
             self.evictions += 1
-            dead = [k for k in self._bundles
-                    if len(k) > 1 and k[1] == victim.fingerprint]
-            for k in dead:
-                del self._bundles[k]
+            self._drop_bundles_locked(victim.fingerprint)
 
     # -- program tier ---------------------------------------------------
     def program(self, art: Artifact) -> tuple[LoweredProgram, bool]:
@@ -332,11 +359,33 @@ class ProgramCache:
             cached, _ = self._install_locked(art_fp, prog)
             return cached
 
+    def peek(self, art_fp: str) -> LoweredProgram | None:
+        """The resident program for an artifact fingerprint, or ``None`` —
+        NEVER lowers. The broadcast follower's pre-warm check: a follower
+        whose cache already holds the program must not touch the transport.
+        A resident peek counts as a hit and refreshes recency (it is a use
+        like any other)."""
+        with self._lock:
+            prog = self._programs.get(art_fp)
+            if prog is not None:
+                self._programs.move_to_end(art_fp)
+                self.program_hits += 1
+            return prog
+
     # -- bundle tier ----------------------------------------------------
-    def bundle(self, key: tuple, build: Callable[[], Any]) -> tuple[Any, bool]:
+    def bundle(self, key: tuple, build: Callable[[], Any],
+               nbytes: int = 0) -> tuple[Any, bool]:
+        """Get-or-build a compiled bundle. ``nbytes`` is the device-array
+        bytes the bundle's program pins (``program_nbytes``); when the
+        program is not cache-resident, that charge enters the LRU budget as
+        an orphan so cache-bypassing callers cannot pin unbounded device
+        memory invisibly."""
         with self._lock:
             if key in self._bundles:
                 self.bundle_hits += 1
+                fp = key[1] if len(key) > 1 else None
+                if fp in self._orphans:
+                    self._orphans.move_to_end(fp)
                 return self._bundles[key], True
         built = build()
         with self._lock:
@@ -347,12 +396,20 @@ class ProgramCache:
                 return self._bundles[key], True
             self._bundles[key] = built
             self.bundle_misses += 1
+            fp = key[1] if len(key) > 1 else None
+            if (fp is not None and nbytes > 0 and fp not in self._orphans
+                    and not any(p.fingerprint == fp
+                                for p in self._programs.values())):
+                self._orphans[fp] = int(nbytes)
+                self.bytes += int(nbytes)
+                self._evict_locked()
         return built, False
 
     def clear(self) -> None:
         with self._lock:
             self._programs.clear()
             self._bundles.clear()
+            self._orphans.clear()
             self.bytes = 0
             self.evictions = 0
             self.program_hits = self.program_misses = 0
@@ -368,7 +425,9 @@ class ProgramCache:
                     "program_hits": self.program_hits,
                     "program_misses": self.program_misses,
                     "bundle_hits": self.bundle_hits,
-                    "bundle_misses": self.bundle_misses}
+                    "bundle_misses": self.bundle_misses,
+                    "orphan_programs": len(self._orphans),
+                    "orphan_bundle_bytes": sum(self._orphans.values())}
 
 
 #: the process-wide default cache every ``make_runtime`` / serving lane shares

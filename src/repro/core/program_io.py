@@ -24,6 +24,7 @@ pins the roundtrip on every fuzzed artifact.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 
 import jax.numpy as jnp
@@ -63,6 +64,15 @@ def serialize_program(prog: LoweredProgram) -> bytes:
     }
     return json.dumps(envelope, sort_keys=True,
                       separators=(",", ":")).encode()
+
+
+def envelope_digest(blob: bytes) -> str:
+    """SHA-256 hex over the raw envelope bytes — the content address the
+    network transport stamps into its frame checksum and telemetry. Distinct
+    from ``program_fingerprint`` (which binds scalars to the artifact): this
+    digest names the exact serialized BYTES, so two hosts can agree they
+    hold the same envelope without parsing it."""
+    return hashlib.sha256(blob).hexdigest()
 
 
 def _load_envelope(blob: bytes) -> dict:
@@ -132,6 +142,23 @@ def deserialize_program(blob: bytes, artifact: Artifact, *,
     except TypeError as e:
         raise ProgramIOError(f"envelope plan fields do not reconstruct "
                              f"encode/decode plans: {e}") from None
+    # the plans are redundant with the scalars BY CONSTRUCTION (lowering
+    # derives them); demand consistency so a tamperer cannot smuggle a
+    # divergent plan past the fingerprint check (which binds scalars only)
+    want_encode = EncodePlan(T=scalars["T"], x_min=scalars["x_min"],
+                             e_max=scalars["e_max"], n_in=scalars["n_in"])
+    want_decode = DecodePlan(n_groups=scalars["n_groups"],
+                             per_group=scalars["per_group"],
+                             sentinel=scalars["T"],
+                             fallback=scalars["fallback"])
+    if encode != want_encode:
+        raise ProgramIOError(f"envelope encode plan {env['encode']} is "
+                             f"inconsistent with its scalars — plan fields "
+                             f"were altered independently")
+    if decode != want_decode:
+        raise ProgramIOError(f"envelope decode plan {env['decode']} is "
+                             f"inconsistent with its scalars — plan fields "
+                             f"were altered independently")
     prog = LoweredProgram(
         fingerprint=expect_fp,
         artifact=artifact,

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.core import ttfs
 from repro.core.artifact import Artifact
 from repro.core.lif_dynamics import lif_scan
-from repro.core.lowering import LoweredProgram, get_cache, lower
+from repro.core.lowering import (LoweredProgram, get_cache, lower,
+                                 program_nbytes)
 from repro.core.types import SNNOutput, decode_output  # noqa: F401 — SNNOutput
 #                               re-exported: runtimes/tests import it from here
 
@@ -84,7 +85,8 @@ class SNNReference:
         self.w_f32 = prog.w_float
         self.scale = prog.scale
         bundle, self.cache_hit = get_cache().bundle(
-            ("reference", prog.fingerprint), lambda: _build_bundle(prog))
+            ("reference", prog.fingerprint), lambda: _build_bundle(prog),
+            nbytes=program_nbytes(prog))
         self._fwd = bundle["forward"]
         # dense baselines (Table 3) — shared jitted callables, one compile
         # per program per process

@@ -50,17 +50,39 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
 
 
 # ------------------------------------------------ program broadcast hook
+class ProgramBroadcastError(RuntimeError):
+    """A follower could not obtain the leader's envelope (transport failure,
+    timeout, retries exhausted). Typed so launch supervisors can tell a
+    distribution failure from a program-integrity failure
+    (``ProgramIOError``) — the two demand different remediation (retry /
+    re-elect leader vs. quarantine the envelope). Carries the transport's
+    original exception as ``cause``."""
+
+    def __init__(self, role: str, cause: Exception):
+        super().__init__(f"{role}: program broadcast failed: "
+                         f"{type(cause).__name__}: {cause}")
+        self.role = role
+        self.cause = cause
+
+
 def broadcast_program(artifact, *, leader, publish=None, fetch=None):
     """Lower once per process group.
 
     Leader: lowers the artifact (through the active program cache) and, if
-    ``publish`` is given, sends the serialized envelope to the group.
-    Follower: ``fetch()``es the leader's envelope and deserializes it against
-    the local artifact copy — never calling the lowering stage. Both roles
-    return the resident ``LoweredProgram``; fingerprint equality across the
-    group is the cross-host determinism check conformance pins in-process.
+    ``publish`` is given, sends the serialized envelope to the group —
+    exactly one publish per leader call, no matter how many followers fetch
+    it (the transport serves the same envelope to every connection).
+    Follower: peeks the local program cache first — a pre-warmed follower
+    (program already resident for this artifact fingerprint) NEVER touches
+    the network; otherwise ``fetch()``es the leader's envelope and
+    deserializes it against the local artifact copy, never calling the
+    lowering stage. Transport failures surface as a typed
+    ``ProgramBroadcastError`` (bounded fetchers raise, they do not hang);
+    integrity failures keep their ``ProgramIOError`` type. Both roles return
+    the resident ``LoweredProgram``; fingerprint equality across the group
+    is the cross-host determinism check conformance pins in-process.
     """
-    from repro.core.lowering import lower
+    from repro.core.lowering import get_cache, lower
     from repro.core.program_io import deserialize_program, serialize_program
     if leader:
         prog = lower(artifact)
@@ -70,7 +92,14 @@ def broadcast_program(artifact, *, leader, publish=None, fetch=None):
     if fetch is None:
         raise ValueError("follower role requires a fetch callable "
                          "(the leader's published envelope)")
-    return deserialize_program(fetch(), artifact)
+    resident = get_cache().peek(artifact.fingerprint())
+    if resident is not None:
+        return resident
+    try:
+        blob = fetch()
+    except Exception as e:
+        raise ProgramBroadcastError("follower", e) from e
+    return deserialize_program(blob, artifact)
 
 
 def file_publisher(path):

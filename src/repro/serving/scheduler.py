@@ -1112,6 +1112,19 @@ class ServingScheduler:
         cache_stats = get_cache().stats()
         st["program_cache_bytes"] = int(cache_stats["bytes"])
         st["program_cache_evictions"] = int(cache_stats["evictions"])
+        # transport health for the same process — how this scheduler's
+        # program arrived (and whether followers are retrying/failing to
+        # fetch from here). Lazy import: schedulers in single-host launches
+        # never pay for the transport module.
+        from repro.distributed.transport import metrics_snapshot
+        tsnap = metrics_snapshot()
+        st["transport_publishes"] = int(tsnap.get("publishes", 0))
+        st["transport_serves"] = int(tsnap.get("serves", 0))
+        st["transport_fetches"] = int(tsnap.get("fetches", 0))
+        st["transport_fetch_bytes"] = int(tsnap.get("fetch_bytes", 0))
+        st["transport_fetch_retries"] = int(tsnap.get("fetch_retries", 0))
+        st["transport_fetch_failures"] = int(tsnap.get("fetch_failures", 0))
+        st["transport_fetch_ms_p95"] = float(tsnap.get("fetch_ms_p95", 0.0))
         if self.family == "board":
             board_cycles = int(snap.get("board_cycles", 0))
             cost = getattr(self.lanes[0].runtime, "cost", None)

@@ -369,6 +369,71 @@ def test_bundles_die_with_their_program(trained_artifact):
         install(prev)
 
 
+def test_orphan_bundle_bytes_enter_the_budget_once(trained_artifact):
+    """Regression: bundles built over cache-bypassing ``lower(cache=False)``
+    programs used to pin device arrays entirely OUTSIDE the LRU byte budget.
+    They are now charged as orphans — once per distinct program fingerprint
+    no matter how many bundles share it — and the charge merges (no double
+    count) if the program is later properly installed."""
+    art, _, _ = trained_artifact
+    (a,) = _variants(art, 1)
+    orphan_prog = lower(a, cache=False)       # never installed -> orphan
+    per = program_nbytes(orphan_prog)
+    cache = ProgramCache(max_bytes=4 * per)
+    prev = install(cache)
+    try:
+        cache.bundle(("fam", orphan_prog.fingerprint, "x"),
+                     lambda: object(), nbytes=per)
+        cache.bundle(("fam", orphan_prog.fingerprint, "y"),
+                     lambda: object(), nbytes=per)
+        st = cache.stats()
+        assert st["orphan_programs"] == 1, "one charge per fingerprint"
+        assert st["orphan_bundle_bytes"] == per
+        assert st["bytes"] == per
+
+        resident = lower(a)                   # same fingerprint installs
+        assert resident.fingerprint == orphan_prog.fingerprint
+        st = cache.stats()
+        assert st["orphan_programs"] == 0, "orphan merged into resident"
+        assert st["orphan_bundle_bytes"] == 0
+        assert st["bytes"] == per, "merge must not double-charge"
+        assert st["programs"] == 1
+    finally:
+        install(prev)
+
+
+def test_orphans_evict_before_programs_and_take_their_bundles(
+        trained_artifact):
+    art, _, _ = trained_artifact
+    a, b, c = _variants(art, 3)
+    orphan_prog = lower(a, cache=False)
+    per = program_nbytes(orphan_prog)
+    cache = ProgramCache(max_bytes=2 * per)   # resident + orphan fill it
+    prev = install(cache)
+    try:
+        resident = lower(b)
+        sentinel = object()
+        cache.bundle(("fam", orphan_prog.fingerprint, "cfg"),
+                     lambda: sentinel, nbytes=per)
+        assert cache.stats()["bytes"] == 2 * per
+        lower(c)                              # past budget: orphan dies first
+        st = cache.stats()
+        assert st["orphan_programs"] == 0
+        assert st["orphan_bundle_bytes"] == 0
+        assert st["evictions"] == 1
+        assert st["programs"] == 2, "both real programs survive the orphan"
+        assert st["bytes"] == 2 * per
+        misses = st["program_misses"]
+        assert lower(b) is resident           # b was never the victim
+        assert cache.stats()["program_misses"] == misses
+        # the orphan's bundle died with its charge: fresh build required
+        rebuilt, hit = cache.bundle(("fam", orphan_prog.fingerprint, "cfg"),
+                                    lambda: object(), nbytes=per)
+        assert rebuilt is not sentinel and hit is False
+    finally:
+        install(prev)
+
+
 def test_cache_stats_and_prometheus_surface_lru_fields(trained_artifact):
     from repro.telemetry.export import program_cache_text
     art, _, _ = trained_artifact

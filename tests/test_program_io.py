@@ -10,18 +10,21 @@ an in-memory and the shared-file transport.
 """
 
 import copy
+import json
 import threading
 
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.conformance.fuzz import fuzz_case, fuzz_envelope_mutations
 from repro.core.artifact import Artifact
 from repro.core.lowering import ProgramCache, install, lower
-from repro.core.program_io import (ProgramIOError, deserialize_program,
-                                   serialize_program)
-from repro.launch.mesh import (broadcast_program, file_fetcher,
-                               file_publisher)
+from repro.core.program_io import (FORMAT_VERSION, ProgramIOError,
+                                   deserialize_program, serialize_program)
+from repro.launch.mesh import (ProgramBroadcastError, broadcast_program,
+                               file_fetcher, file_publisher)
 
 ARRAYS = ("w_float", "w_int8", "thresholds", "w_padded", "thr_padded")
 
@@ -98,7 +101,6 @@ def test_every_envelope_mutation_is_rejected(trained_artifact):
 
 
 def test_tampered_array_hash_names_the_array(trained_artifact):
-    import json
     art, _, _ = trained_artifact
     env = json.loads(serialize_program(lower(art, cache=False)))
     digest = env["arrays"]["w_padded"]
@@ -188,3 +190,100 @@ def test_file_fetcher_times_out(tmp_path):
                          poll_s=0.01)
     with pytest.raises(TimeoutError, match="leader"):
         fetch()
+
+
+# ------------------------------------------------------ envelope edge cases
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_roundtrip_fingerprint_property(seed):
+    """Property: for ANY valid fuzzed artifact, serialize -> deserialize is
+    bit-identical — same program fingerprint AND byte-identical envelope."""
+    art = fuzz_case(seed % 1000).artifact
+    fresh = lower(art, cache=False)
+    blob = serialize_program(fresh)
+    rt = deserialize_program(blob, art, cache=False)
+    assert rt.fingerprint == fresh.fingerprint
+    assert serialize_program(rt) == blob
+
+
+def test_truncated_json_rejected(trained_artifact):
+    art, _, _ = trained_artifact
+    blob = serialize_program(lower(art, cache=False))
+    with pytest.raises(ProgramIOError, match="not valid JSON"):
+        deserialize_program(blob[:10], art, cache=False)
+    with pytest.raises(ProgramIOError, match="not valid JSON"):
+        deserialize_program(b"", art, cache=False)
+
+
+def test_unknown_envelope_version_rejected(trained_artifact):
+    art, _, _ = trained_artifact
+    env = json.loads(serialize_program(lower(art, cache=False)))
+    env["format"] = FORMAT_VERSION + 1
+    bad = json.dumps(env, sort_keys=True, separators=(",", ":")).encode()
+    with pytest.raises(ProgramIOError, match="format"):
+        deserialize_program(bad, art, cache=False)
+
+
+def test_empty_array_manifest_rejected(trained_artifact):
+    art, _, _ = trained_artifact
+    env = json.loads(serialize_program(lower(art, cache=False)))
+    env["arrays"] = {}
+    bad = json.dumps(env, sort_keys=True, separators=(",", ":")).encode()
+    with pytest.raises(ProgramIOError, match="array set"):
+        deserialize_program(bad, art, cache=False)
+
+
+# ---------------------------------------------------- broadcast semantics
+def test_leader_publishes_exactly_once_with_concurrent_followers(
+        trained_artifact, scoped_cache):
+    art, _, _ = trained_artifact
+    published: list = []
+    ready = threading.Event()
+
+    def publish(blob):
+        published.append(blob)
+        ready.set()
+
+    def fetch():
+        assert ready.wait(timeout=30), "leader never published"
+        return published[0]
+
+    results: list = []
+    followers = [threading.Thread(
+        target=lambda: results.append(
+            broadcast_program(art, leader=False, fetch=fetch)))
+        for _ in range(4)]
+    for t in followers:
+        t.start()
+    leader_prog = broadcast_program(art, leader=True, publish=publish)
+    for t in followers:
+        t.join(timeout=30)
+    assert not any(t.is_alive() for t in followers)
+    assert len(published) == 1, "leader must publish exactly once"
+    assert len(results) == 4
+    assert all(p.fingerprint == leader_prog.fingerprint for p in results)
+
+
+def test_prewarmed_follower_never_fetches(trained_artifact, scoped_cache):
+    art, _, _ = trained_artifact
+    resident = lower(art)                     # pre-warm the local cache
+
+    def explode():
+        raise AssertionError("pre-warmed follower called fetch()")
+
+    prog = broadcast_program(art, leader=False, fetch=explode)
+    assert prog is resident
+
+
+def test_follower_fetch_failure_is_typed_not_a_hang(trained_artifact,
+                                                    scoped_cache):
+    art, _, _ = trained_artifact
+
+    def broken():
+        raise ConnectionResetError("leader went away")
+
+    with pytest.raises(ProgramBroadcastError) as ei:
+        broadcast_program(art, leader=False, fetch=broken)
+    assert ei.value.role == "follower"
+    assert isinstance(ei.value.cause, ConnectionResetError)
+    assert "leader went away" in str(ei.value)

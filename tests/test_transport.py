@@ -1,0 +1,280 @@
+"""The TCP program-distribution transport + its fault-injection harness.
+
+Covers the frame codec (every header rejection path named), the
+server/fetcher pair over real sockets, bounded retries with seeded-jitter
+backoff (reproducible schedules), telemetry spans and the metrics surface
+``ServingScheduler.stats()`` reports, the transport grammar, the
+end-to-end tcp broadcast, and the full fault-proxy scenario sweep's
+*detected-or-bit-exact* invariant.
+"""
+
+import socket
+import threading
+
+import pytest
+
+from repro.conformance.fuzz import fuzz_case
+from repro.conformance.transport_faults import SCENARIOS, run_suite
+from repro.core.lowering import ProgramCache, install, lower
+from repro.core.program_io import (ProgramIOError, envelope_digest,
+                                   serialize_program)
+from repro.distributed import transport as tp
+from repro.launch.cluster import Endpoint, parse_transport
+from repro.launch.mesh import broadcast_program
+from repro.telemetry import trace as ttrace
+
+
+@pytest.fixture()
+def scoped_cache():
+    cache = ProgramCache()
+    prev = install(cache)
+    yield cache
+    install(prev)
+
+
+@pytest.fixture(scope="module")
+def envelope():
+    """A real fuzzed artifact + its serialized program envelope."""
+    art = fuzz_case(11).artifact
+    prog = lower(art, cache=False)
+    return art, prog, serialize_program(prog)
+
+
+def _serve_raw(data: bytes) -> tuple[str, int, threading.Thread]:
+    """One-shot raw-byte server for crafting invalid frames on the wire."""
+    sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    sock.bind(("127.0.0.1", 0))
+    sock.listen(1)
+    host, port = sock.getsockname()
+
+    def serve():
+        conn, _ = sock.accept()
+        conn.sendall(data)
+        conn.close()
+        sock.close()
+
+    t = threading.Thread(target=serve, daemon=True)
+    t.start()
+    return host, port, t
+
+
+# ------------------------------------------------------------ frame codec
+def test_frame_roundtrip():
+    payload = b'{"hello": "program"}'
+    frame = tp.encode_frame(payload)
+    length, digest = tp.decode_header(frame[:tp.HEADER_LEN])
+    assert length == len(payload)
+    assert frame[tp.HEADER_LEN:] == payload
+    assert digest == bytes.fromhex(envelope_digest(payload))
+
+
+def test_frame_header_rejections_name_the_corruption():
+    frame = bytearray(tp.encode_frame(b"payload"))
+    with pytest.raises(tp.FrameError, match="header is 3 bytes"):
+        tp.decode_header(bytes(frame[:3]))
+    bad = frame.copy()
+    bad[0] ^= 0xFF
+    with pytest.raises(tp.FrameError, match="magic"):
+        tp.decode_header(bytes(bad[:tp.HEADER_LEN]))
+    bad = frame.copy()
+    bad[4] = 99
+    with pytest.raises(tp.FrameError, match="wire version 99"):
+        tp.decode_header(bytes(bad[:tp.HEADER_LEN]))
+    bad = frame.copy()
+    bad[5:13] = (tp.MAX_ENVELOPE_BYTES + 1).to_bytes(8, "big")
+    with pytest.raises(tp.FrameError, match="transport cap"):
+        tp.decode_header(bytes(bad[:tp.HEADER_LEN]))
+    bad = frame.copy()
+    bad[5:13] = (0).to_bytes(8, "big")
+    with pytest.raises(tp.FrameError, match="non-positive"):
+        tp.decode_header(bytes(bad[:tp.HEADER_LEN]))
+    with pytest.raises(tp.FrameError, match="transport cap"):
+        tp.encode_frame(b"\x00" * (tp.MAX_ENVELOPE_BYTES + 1))
+
+
+def test_checksum_mismatch_detected_on_the_wire():
+    frame = bytearray(tp.encode_frame(b"the quick brown program"))
+    frame[-1] ^= 0x01                      # flip a payload byte
+    host, port, t = _serve_raw(bytes(frame))
+    with pytest.raises(tp.FetchRetriesExhausted) as ei:
+        tp.fetch_bytes(host, port, retries=0, read_timeout_s=1.0)
+    assert isinstance(ei.value.last, tp.FrameError)
+    assert "checksum mismatch" in str(ei.value.last)
+    t.join(timeout=5)
+
+
+def test_truncation_detected_on_the_wire():
+    frame = tp.encode_frame(b"cut short")
+    host, port, t = _serve_raw(frame[:-2])
+    with pytest.raises(tp.FetchRetriesExhausted) as ei:
+        tp.fetch_bytes(host, port, retries=0, read_timeout_s=1.0)
+    assert "truncated frame" in str(ei.value.last)
+    t.join(timeout=5)
+
+
+# -------------------------------------------------------- server + fetcher
+def test_server_fetch_is_bit_identical(envelope):
+    _, _, blob = envelope
+    with tp.ProgramServer(blob) as srv:
+        got = tp.fetch_bytes(srv.host, srv.port)
+        assert got == blob
+        assert envelope_digest(got) == envelope_digest(blob)
+
+
+def test_server_counts_serves_and_awaits(envelope):
+    _, _, blob = envelope
+    with tp.ProgramServer(blob) as srv:
+        assert not srv.await_serves(1, timeout_s=0.05)
+        for _ in range(3):
+            tp.fetch_bytes(srv.host, srv.port)
+        assert srv.await_serves(3, timeout_s=5.0)
+        assert srv.serves == 3
+    assert srv.endpoint == f"tcp://127.0.0.1:{srv.port}"
+
+
+def test_fetch_from_dead_endpoint_exhausts_retries():
+    # bind-then-close: the port exists but nothing listens -> refused
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    before = tp.metrics_snapshot().get("fetch_failures", 0)
+    with pytest.raises(tp.FetchRetriesExhausted) as ei:
+        tp.fetch_bytes("127.0.0.1", port, retries=2, backoff_s=0.005,
+                       connect_timeout_s=0.5)
+    assert ei.value.attempts == 3
+    assert tp.metrics_snapshot().get("fetch_failures", 0) == before + 1
+
+
+def test_backoff_schedule_is_seeded_and_exponential():
+    a = tp.backoff_schedule(4, 0.05, seed=3)
+    b = tp.backoff_schedule(4, 0.05, seed=3)
+    c = tp.backoff_schedule(4, 0.05, seed=4)
+    assert a == b, "same seed must replay the same jitter"
+    assert a != c, "different seeds must not thundering-herd in lockstep"
+    for i, sleep in enumerate(a):
+        base = 0.05 * (2 ** i)
+        assert base <= sleep < 2 * base, "jitter must stay in [1, 2)x"
+
+
+# --------------------------------------------------------------- telemetry
+def test_publish_and_fetch_emit_spans(envelope):
+    _, _, blob = envelope
+    tracer = ttrace.Tracer()
+    prev = ttrace.install(tracer)
+    try:
+        publish = tp.tcp_publisher()
+        publish(blob)
+        server = publish.server
+        try:
+            tp.fetch_bytes(server.host, server.port)
+        finally:
+            server.stop()
+    finally:
+        ttrace.install(prev)
+    (pub,) = tracer.find("transport.publish")
+    assert pub.scope == "system"
+    assert pub.attrs["bytes"] == len(blob)
+    (fetch,) = tracer.find("transport.fetch")
+    assert fetch.scope == "system"
+    assert fetch.attrs == {"bytes": len(blob), "attempts": 1, "retries": 0}
+    # endpoint is host context, not canonical
+    assert "endpoint" in fetch.meta and "endpoint" not in fetch.attrs
+
+
+def test_scheduler_stats_surface_transport_health(trained_artifact,
+                                                  scoped_cache):
+    from repro.serving.scheduler import ServingScheduler
+    art, _, _ = trained_artifact
+    blob = serialize_program(lower(art))
+    tp.reset_metrics()
+    with tp.ProgramServer(blob) as srv:
+        tp.fetch_bytes(srv.host, srv.port)
+    with ServingScheduler(art, spec="reference", workers=1,
+                          max_batch=4) as s:
+        st = s.stats()
+    assert st["transport_fetches"] == 1
+    assert st["transport_serves"] == 1
+    assert st["transport_fetch_bytes"] == len(blob)
+    assert st["transport_fetch_retries"] == 0
+    assert st["transport_fetch_failures"] == 0
+    assert st["transport_fetch_ms_p95"] > 0.0
+
+
+# ------------------------------------------------------- transport grammar
+def test_parse_transport_grammar():
+    assert parse_transport("tcp://10.0.0.7:7070") == Endpoint(
+        scheme="tcp", host="10.0.0.7", port=7070)
+    assert parse_transport("tcp://leader:0").port == 0
+    assert parse_transport("file:///shared/prog.json") == Endpoint(
+        scheme="file", path="/shared/prog.json")
+    assert parse_transport("/shared/prog.json") == Endpoint(
+        scheme="file", path="/shared/prog.json")
+    for bad, why in (("", "empty"), ("tcp://noport", "HOST:PORT"),
+                     ("tcp://h:notanint", "not an integer"),
+                     ("tcp://h:70000", "out of range"),
+                     ("file://", "empty path"),
+                     ("udp://h:1", "unknown transport scheme")):
+        with pytest.raises(ValueError, match=why):
+            parse_transport(bad)
+
+
+# -------------------------------------------------------- tcp broadcast e2e
+def test_broadcast_over_tcp(envelope, scoped_cache):
+    art, leader_prog, blob = envelope
+    publish = tp.tcp_publisher()
+    publish(serialize_program(lower(art)))
+    server = publish.server
+    try:
+        follower_cache = ProgramCache()
+        prev = install(follower_cache)
+        try:
+            follower = broadcast_program(
+                art, leader=False,
+                fetch=tp.tcp_fetcher(server.host, server.port))
+        finally:
+            install(prev)
+    finally:
+        server.stop()
+    assert follower.fingerprint == leader_prog.fingerprint
+    st = follower_cache.stats()
+    assert st["programs"] == 1 and st["program_misses"] == 0
+
+
+def test_fetch_program_verifies_against_wrong_artifact(envelope):
+    art, _, blob = envelope
+    other = fuzz_case(12).artifact
+    with tp.ProgramServer(blob) as srv:
+        with pytest.raises(ProgramIOError, match="artifact fingerprint"):
+            tp.fetch_program(srv.host, srv.port, other, cache=False)
+
+
+# ------------------------------------------------- fault-proxy conformance
+def test_fault_suite_holds_detected_or_bitexact(envelope):
+    art, prog, blob = envelope
+    stale = serialize_program(lower(fuzz_case(12).artifact, cache=False))
+    verdicts = run_suite(blob, art, prog.fingerprint, stale_blob=stale,
+                         seed=5)
+    assert len(verdicts) == len(SCENARIOS) >= 20
+    bad = [v for v in verdicts if not v["ok"]]
+    assert not bad, "; ".join(
+        f"{v['scenario']}: expected {v['expect']}, got {v['outcome']} "
+        f"({v['detail']})" for v in bad)
+    # the invariant's hard floor: NOTHING may silently diverge or crash
+    # untyped, even if an expectation is wrong
+    assert all(v["outcome"] in ("detected", "bitexact") for v in verdicts)
+
+
+def test_detected_failures_name_the_corruption(envelope):
+    art, prog, blob = envelope
+    by_name = {s.name: s for s in SCENARIOS}
+    checks = {"flip-checksum": "checksum mismatch",
+              "truncate-last-byte": "truncated frame",
+              "flip-version": "wire version",
+              "tamper-array-hash-reframed": "hash mismatch"}
+    from repro.conformance.transport_faults import run_scenario
+    for name, needle in checks.items():
+        v = run_scenario(by_name[name], blob=blob, artifact=art,
+                         leader_fingerprint=prog.fingerprint)
+        assert v["outcome"] == "detected", v
+        assert needle in v["detail"], (name, v["detail"])
